@@ -1,0 +1,66 @@
+"""Shared benchmark plumbing: dataset registry, timing, result sink."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+import repro.data as D
+from repro.core.sgbdt import SGBDTConfig
+from repro.trees.learner import LearnerConfig
+
+OUT_DIR = pathlib.Path("experiments")
+
+
+def save(name: str, payload: dict) -> pathlib.Path:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    p = OUT_DIR / f"{name}.json"
+    p.write_text(json.dumps(payload, indent=1, default=float))
+    return p
+
+
+def realsim_like(quick: bool = True):
+    """High-dimensional sparse classification (the paper's real-sim role)."""
+    if quick:
+        return D.make_sparse_classification(2_000, 800, 20, seed=7)
+    return D.make_sparse_classification(8_000, 3_000, 40, seed=7)
+
+
+def higgs_like(quick: bool = True):
+    """Dense low-diversity classification (the paper's Higgs role)."""
+    if quick:
+        return D.make_dense_low_diversity(120, 28, 20_000, seed=11)
+    return D.make_dense_low_diversity(400, 28, 120_000, seed=11)
+
+
+def e2006_like(quick: bool = True):
+    """Sparse high-dim regression (the paper's E2006-log1p role)."""
+    if quick:
+        return D.make_sparse_regression(1_500, 1_000, 25, seed=13)
+    return D.make_sparse_regression(6_000, 4_000, 40, seed=13)
+
+
+def paper_cfg(n_trees: int, depth: int, loss: str = "logistic",
+              sampling_rate: float = 0.8, step: float = 0.1) -> SGBDTConfig:
+    """The paper's validity-experiment settings, scaled: 400 trees / 100
+    leaves -> quick variants keep the same ratios."""
+    return SGBDTConfig(
+        n_trees=n_trees,
+        step_length=step,
+        sampling_rate=sampling_rate,
+        loss=loss,
+        learner=LearnerConfig(depth=depth, n_bins=64, feature_fraction=0.8),
+    )
+
+
+def time_call(fn, *args, reps: int = 3, **kw) -> tuple[float, object]:
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps, out

@@ -1,0 +1,139 @@
+"""Paper Fig. 10 + Eq. 13: speedup of asynch-SGBDT vs fork-join baselines.
+
+Wall-clock asynchrony cannot run on one CPU, so the timing geometry is
+reproduced by the event-driven cluster simulator, parameterized by
+COMPONENT TIMES MEASURED from the actual jitted implementation:
+  t_build  — one build_tree call on a sampled subdataset,
+  t_server — target rebuild (grad + sample + fold),
+  t_comm   — tree pull+push bytes over the paper's 1 GbE TCP/IP network.
+The paper's numbers to match: asynch-SGBDT 14x (real-sim) / 20x
+(E2006-log1p) at 32 workers; LightGBM 5-7x; DimBoost 4-6x.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import e2006_like, paper_cfg, realsim_like, save, time_call
+from repro.core.baselines import (
+    max_workers_bound,
+    speedup_model_async,
+    speedup_model_dimboost,
+    speedup_model_sync,
+)
+from repro.core.simulator import ClusterSpec, simulate_async, simulate_sync
+from repro.core.sgbdt import init_state, sgbdt_round
+from repro.data.sampling import bernoulli_weights
+from repro.trees.learner import build_tree
+from repro.trees.tree import apply_tree
+
+WORKERS = [1, 2, 4, 8, 16, 32]
+GBE_BYTES_PER_S = 110e6          # ~1 GbE effective
+
+
+def measure_components(cfg, data) -> dict:
+    key = jax.random.PRNGKey(0)
+    state = init_state(cfg, data)
+    g, h = cfg.grad_hess(data.labels, state.f)
+    m_prime, _ = bernoulli_weights(key, cfg.sampling_rate, data.multiplicity)
+
+    t_build, tree = time_call(
+        lambda: build_tree(cfg.learner, data.bins, m_prime * g, m_prime, key)
+    )
+
+    def server_side():
+        mp, _ = bernoulli_weights(key, cfg.sampling_rate, data.multiplicity)
+        gg, _ = cfg.grad_hess(data.labels, state.f)
+        return state.f + cfg.step_length * apply_tree(tree, data.bins), mp, gg
+
+    t_server, _ = time_call(jax.jit(server_side))
+
+    # tree payload: feature/threshold int32 + leaf f32
+    n_int = tree.feature.shape[-1]
+    n_leaf = tree.leaf_value.shape[-1]
+    tree_bytes = 4 * (2 * n_int + n_leaf)
+    # pull payload: the target vector L'_random (N floats)
+    pull_bytes = 4 * data.n_samples
+    t_comm = (tree_bytes + pull_bytes) / GBE_BYTES_PER_S
+    return {
+        "t_build": t_build,
+        "t_server": t_server,
+        "t_comm": t_comm,
+        "tree_bytes": tree_bytes,
+        "pull_bytes": pull_bytes,
+    }
+
+
+def run(quick: bool = True) -> dict:
+    n_trees = 150 if quick else 400
+    out: dict = {"workers": WORKERS, "datasets": {}}
+    for tag, data, depth, loss in [
+        ("realsim", realsim_like(quick), 6, "logistic"),
+        ("e2006", e2006_like(quick), 6, "mse"),
+    ]:
+        cfg = paper_cfg(n_trees, depth, loss=loss)
+        comp = measure_components(cfg, data)
+        print(f"  {tag}: t_build={comp['t_build']*1e3:.1f}ms "
+              f"t_server={comp['t_server']*1e3:.1f}ms "
+              f"t_comm={comp['t_comm']*1e3:.1f}ms "
+              f"(Eq.13 max workers ~ {max_workers_bound(**{k: comp[k] for k in ('t_build','t_comm','t_server')}):.0f})",
+              flush=True)
+        rows = {"async_sim": [], "sync_sim": [], "dimboost_sim": []}
+        base = None
+        for w in WORKERS:
+            spec = ClusterSpec(
+                n_workers=w, t_build=comp["t_build"],
+                t_comm=comp["t_comm"], t_server=comp["t_server"],
+            )
+            a = simulate_async(spec, n_trees).makespan
+            s = simulate_sync(spec, n_trees)
+            d = simulate_sync(spec, n_trees, comm_model="central")
+            if w == 1:
+                base = max(a, s, d)
+            rows["async_sim"].append(base / a)
+            rows["sync_sim"].append(base / s)
+            rows["dimboost_sim"].append(base / d)
+        warr = np.asarray(WORKERS, float)
+        rows["async_eq13"] = speedup_model_async(
+            warr, comp["t_build"], comp["t_comm"], comp["t_server"]
+        ).tolist()
+        # The paper's environment: ps-lite over 1 GbE TCP/IP put
+        # T(comm)+T(server) at ~T(build)/25 (their Eq. 13 discussion says
+        # 16-32 workers is close to the max for real-sim), which is what
+        # caps their async speedup at 14-22x. Same algorithm, their wire.
+        t_over = comp["t_build"] / 25.0
+
+        def _paper_env_makespan(w: int) -> float:
+            # ps-lite's server owns the NIC: comm serializes *on the server*
+            # (that is exactly Eq. 13's T(Communicate + BuildTarget) term).
+            spec = ClusterSpec(
+                n_workers=w, t_build=comp["t_build"],
+                t_comm=0.0, t_server=t_over,
+            )
+            return simulate_async(spec, n_trees).makespan
+
+        base_pe = _paper_env_makespan(1)
+        rows["async_paper_env"] = [base_pe / _paper_env_makespan(w) for w in WORKERS]
+        rows["sync_model"] = speedup_model_sync(
+            warr, comp["t_build"], comp["t_comm"], comp["t_server"]
+        ).tolist()
+        rows["dimboost_model"] = speedup_model_dimboost(
+            warr, comp["t_build"], comp["t_comm"], comp["t_server"]
+        ).tolist()
+        out["datasets"][tag] = {"components": comp, "speedup": rows}
+        print(f"  {tag} @32w: async {rows['async_sim'][-1]:.1f}x "
+              f"sync {rows['sync_sim'][-1]:.1f}x dimboost {rows['dimboost_sim'][-1]:.1f}x",
+              flush=True)
+    save("fig10_speedup", out)
+    return out
+
+
+def main(quick: bool = True):
+    res = run(quick)
+    print("\npaper targets @32: async 14-20x, LightGBM 5-7x, DimBoost 4-6x")
+    return res
+
+
+if __name__ == "__main__":
+    main()

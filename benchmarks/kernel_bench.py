@@ -1,0 +1,77 @@
+"""Kernel micro-benchmarks: jnp oracle vs Pallas (interpret mode on CPU).
+
+Interpret-mode wall times do NOT reflect TPU performance — the meaningful
+artifacts are (a) correctness at benchmark scale, (b) the ref-backend CPU
+time that parameterizes the Fig. 10 component model, and (c) the kernels'
+arithmetic-intensity table (bytes/flops per tile) used by the roofline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save, time_call
+from repro.kernels import ops, ref
+
+CASES = [
+    # (n, f, n_bins, n_nodes)
+    (4_096, 128, 64, 8),
+    (16_384, 256, 64, 32),
+    (65_536, 64, 64, 64),
+]
+
+
+def hist_intensity(n, f, n_bins, n_nodes, sample_block=512, feature_block=8):
+    """Analytic FLOPs/bytes per histogram kernel invocation (MXU path)."""
+    rows = 2 * n_nodes
+    flops = 2.0 * rows * n * f * n_bins          # dense one-hot contraction
+    bytes_in = n * f * 4 + 3 * n * 4             # bins + node/grad/hess
+    bytes_out = rows * f * n_bins * 4
+    return flops, bytes_in + bytes_out
+
+
+def run(quick: bool = True) -> dict:
+    out: dict = {"cases": []}
+    key = jax.random.PRNGKey(0)
+    for n, f, n_bins, n_nodes in CASES[: 2 if quick else 3]:
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        bins = jax.random.randint(k1, (n, f), 0, n_bins, dtype=jnp.int32)
+        node = jax.random.randint(k2, (n,), 0, n_nodes, dtype=jnp.int32)
+        g = jax.random.normal(k3, (n,))
+        h = jax.random.uniform(k4, (n,))
+
+        t_ref, h_ref = time_call(
+            lambda: ops.build_histogram(bins, node, g, h, n_nodes, n_bins,
+                                        backend="ref")
+        )
+        h_pal = ops.build_histogram(bins, node, g, h, n_nodes, n_bins,
+                                    backend="pallas")
+        ok = bool(np.allclose(h_ref, h_pal, atol=1e-3))
+
+        t_gain, _ = time_call(
+            lambda: ops.split_gain(h_ref, 1.0, 1e-3, backend="ref")
+        )
+        flops, bts = hist_intensity(n, f, n_bins, n_nodes)
+        case = {
+            "n": n, "f": f, "n_bins": n_bins, "n_nodes": n_nodes,
+            "hist_ref_ms": t_ref * 1e3,
+            "gain_ref_ms": t_gain * 1e3,
+            "pallas_matches_ref": ok,
+            "hist_flops": flops,
+            "hist_bytes": bts,
+            "arithmetic_intensity": flops / bts,
+        }
+        out["cases"].append(case)
+        print(f"  N={n} F={f}: hist {t_ref*1e3:.1f}ms gain {t_gain*1e3:.2f}ms "
+              f"pallas_ok={ok} AI={flops/bts:.1f} flop/byte", flush=True)
+    save("kernel_bench", out)
+    return out
+
+
+def main(quick: bool = True):
+    return run(quick)
+
+
+if __name__ == "__main__":
+    main()

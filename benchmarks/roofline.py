@@ -1,0 +1,115 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh):
+    compute term    = per-device loop-aware dot FLOPs / 197 TF/s (bf16)
+    memory term     = per-device HBM-traffic proxy    / 819 GB/s
+    collective term = per-device collective bytes     / 50 GB/s per link
+plus MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D (fwd), and the
+utilization ratio MODEL_FLOPS / (dot_flops * n_devices) that exposes remat
+and redundant-compute waste. The dominant term is the bottleneck the perf
+loop iterates on.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+DRYRUN_DIR = pathlib.Path("experiments/dryrun")
+
+
+def terms(rec: dict) -> dict:
+    hlo = rec["hlo"]
+    t_compute = hlo["dot_flops"] / PEAK_FLOPS_BF16
+    t_memory = hlo["hbm_bytes"] / HBM_BW
+    t_coll = hlo["total_collective_bytes"] / ICI_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    n_dev = rec["n_devices"]
+    useful = rec["model_flops"] / max(hlo["dot_flops"] * n_dev, 1.0)
+    return {
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": rec["model_flops"],
+        "useful_flops_ratio": useful,
+        "hbm_gib_per_dev": (
+            rec["memory"]["argument_bytes"] + rec["memory"]["temp_bytes"]
+        ) / 2**30,
+    }
+
+
+NOTES = {
+    "compute": "compute-bound: raise MXU utilization (tile sizes, fewer "
+               "remat recomputes, fuse small dots)",
+    "memory": "HBM-bound: fuse elementwise chains, widen blocks, cut "
+              "activation dtype to bf16 end-to-end",
+    "collective": "collective-bound: hoist FSDP all-gathers out of the "
+                  "microbatch loop / cache gathered params, or trade FSDP "
+                  "for pure TP on the small-param tensors",
+}
+
+
+def load(mesh: str = "single") -> list[dict]:
+    rows = []
+    for p in sorted(DRYRUN_DIR.glob(f"*__{mesh}.json")):
+        rec = json.loads(p.read_text())
+        if rec["status"] != "ok":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "status": rec["status"],
+                         "reason": rec.get("reason", rec.get("error", ""))})
+            continue
+        row = {"arch": rec["arch"], "shape": rec["shape"], "status": "ok"}
+        row.update(terms(rec))
+        row["note"] = NOTES[row["dominant"]]
+        rows.append(row)
+    return rows
+
+
+def table(mesh: str = "single") -> str:
+    rows = load(mesh)
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful-FLOP ratio | GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | "
+                f"{r['status']}: {r['reason'][:60]} | — | — |"
+            )
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} "
+            f"| {r['memory_s']:.3e} | {r['collective_s']:.3e} "
+            f"| **{r['dominant']}** | {r['useful_flops_ratio']:.2f} "
+            f"| {r['hbm_gib_per_dev']:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+def main(quick: bool = True):
+    for mesh in ("single", "multi"):
+        rows = [r for r in load(mesh) if r["status"] == "ok"]
+        if not rows:
+            print(f"  ({mesh}: no dry-run artifacts — run repro.launch.dryrun)")
+            continue
+        dom = {}
+        for r in rows:
+            dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+        print(f"  {mesh}: {len(rows)} pairs; dominant terms: {dom}")
+        worst = min(rows, key=lambda r: r["useful_flops_ratio"])
+        print(f"  worst useful-FLOP ratio: {worst['arch']}/{worst['shape']} "
+              f"= {worst['useful_flops_ratio']:.3f}")
+        out = pathlib.Path(f"experiments/roofline_{mesh}.md")
+        out.write_text(table(mesh) + "\n")
+        print(f"  wrote {out}")
+    return load("single")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Benchmark entrypoint — one harness per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig10,...]
+
+Artifacts land in experiments/*.json; summaries print as they finish.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+BENCHES = [
+    ("fig5_fig6", "benchmarks.fig5_fig6_convergence",
+     "convergence vs workers (Figs. 5-6)"),
+    ("fig7_fig8", "benchmarks.fig7_fig8_sampling_sensitivity",
+     "sampling-rate sensitivity (Figs. 7-8)"),
+    ("fig9", "benchmarks.fig9_extreme_sampling",
+     "extreme small sampling rate (Fig. 9)"),
+    ("fig10", "benchmarks.fig10_speedup",
+     "speedup vs fork-join baselines (Fig. 10 / Eq. 13)"),
+    ("ablation_newton", "benchmarks.ablation_newton",
+     "gradient vs Newton steps under staleness (paper conclusion 2)"),
+    ("ablation_prop1", "benchmarks.ablation_prop1",
+     "max stable step length vs staleness (Prop. 1 law)"),
+    ("kernels", "benchmarks.kernel_bench", "kernel micro-bench"),
+    ("gbdt_roofline", "benchmarks.gbdt_roofline",
+     "distributed GBDT step roofline (16x16 mesh)"),
+    ("roofline", "benchmarks.roofline",
+     "arch-zoo roofline from dry-run artifacts"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale runs (quick mode is the default)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    import importlib
+
+    t00 = time.time()
+    failures = []
+    for name, module, desc in BENCHES:
+        if only and name not in only:
+            continue
+        print(f"\n=== {name}: {desc} ===", flush=True)
+        t0 = time.time()
+        try:
+            importlib.import_module(module).main(quick=not args.full)
+        except Exception as e:  # noqa: BLE001 — keep the suite running
+            failures.append(name)
+            print(f"  FAILED: {type(e).__name__}: {e}")
+        print(f"  ({time.time() - t0:.1f}s)", flush=True)
+    print(f"\nall benchmarks done in {time.time() - t00:.1f}s; "
+          f"failures: {failures or 'none'}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

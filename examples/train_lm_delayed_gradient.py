@@ -1,0 +1,80 @@
+"""The paper's two mechanisms — Bernoulli importance sampling + delayed
+(stale) gradients with Prop.-1 step scaling — applied to LM training on any
+assigned architecture.
+
+    PYTHONPATH=src python examples/train_lm_delayed_gradient.py \
+        [--arch granite-3-2b] [--delay 4] [--steps 120]
+
+Compares three optimizer regimes on the same data stream:
+  fresh       — standard AdamW (tau = 0)
+  stale       — gradients delayed by tau, same lr  (diverges/oscillates)
+  stale+prop1 — gradients delayed by tau, lr scaled per Proposition 1
+"""
+import argparse
+
+import jax
+import numpy as np
+
+import repro.configs as configs
+import repro.models as M
+import repro.optim as O
+from repro.launch.steps import make_train_step
+from repro.launch.train import synthetic_batches
+
+
+def run(cfg, opt, steps, sample, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(cfg, key)
+    state = opt.init(params)
+    step = jax.jit(make_train_step(cfg, opt, sampling_rate=sample))
+    losses = []
+    for i, batch in enumerate(synthetic_batches(cfg, 8, 64, steps, seed=seed)):
+        params, state, m = step(params, state, batch, jax.random.fold_in(key, i))
+        losses.append(float(m["loss"]))
+    return np.asarray(losses)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--delay", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--rho", type=float, default=0.3)
+    ap.add_argument("--sample", type=float, default=0.8)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch).reduced()
+    print(f"arch {cfg.name} (reduced), delay tau={args.delay}")
+
+    fresh = run(cfg, O.adamw(args.lr, max_grad_norm=1.0), args.steps, args.sample)
+    stale = run(
+        cfg,
+        O.delayed_gradient(O.adamw(args.lr, max_grad_norm=1.0), args.delay),
+        args.steps, args.sample,
+    )
+    lr_scaled = args.lr * O.staleness_step_scale(args.delay, args.rho)
+    scaled = run(
+        cfg,
+        O.delayed_gradient(O.adamw(lr_scaled, max_grad_norm=1.0), args.delay),
+        args.steps, args.sample,
+    )
+
+    def summarize(tag, l):
+        print(f"  {tag:12s} loss: start {l[:5].mean():.3f} -> "
+              f"end {l[-10:].mean():.3f} (min {l.min():.3f})")
+
+    summarize("fresh", fresh)
+    summarize("stale", stale)
+    summarize("stale+prop1", scaled)
+    noise = lambda l: float(np.std(np.diff(l[len(l) // 2:])))
+    print(f"\nstep-to-step noise: fresh {noise(fresh):.3f}  "
+          f"stale {noise(stale):.3f}  stale+prop1 {noise(scaled):.3f}")
+    print("expected (paper conclusion 2): fresh converges fastest; plain "
+          "stale is noisier and diverges as tau grows; stale+prop1 trades "
+          "a smaller step for stability — slower at short horizons, but it "
+          "is the setting that keeps scaling to more workers.")
+
+
+if __name__ == "__main__":
+    main()

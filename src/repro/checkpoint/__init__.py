@@ -1,0 +1,14 @@
+"""Checkpointing: pytree save/restore with manifest + integrity checks."""
+from repro.checkpoint.store import (
+    CheckpointManager,
+    latest_step,
+    restore_pytree,
+    save_pytree,
+)
+
+__all__ = [
+    "CheckpointManager",
+    "latest_step",
+    "restore_pytree",
+    "save_pytree",
+]

@@ -1,0 +1,41 @@
+"""The paper's contribution: asynch-SGBDT (Algorithm 3) and its baselines.
+
+- ``sgbdt``: serial stochastic GBDT (the tau = 0 special case) + shared state.
+- ``async_sgbdt``: the asynchronous trainer — delayed targets F^{k(j)} via
+  delay schedules, exactly the object Proposition 1 reasons about. Includes a
+  fully jit/scan form that doubles as the distributed ``gbdt_train_step``.
+- ``simulator``: event-driven parameter-server cluster simulator
+  (heterogeneous workers, network jitter) producing delay schedules and
+  wall-clock estimates; powers the Fig. 10 speedup reproduction.
+- ``baselines``: synchronous fork-join SGBDT (LightGBM-style) and
+  DimBoost-style centralized aggregation timing models.
+"""
+from repro.core.sgbdt import SGBDTConfig, TrainState, init_state, train_serial, sgbdt_round
+from repro.core.async_sgbdt import (
+    constant_delay,
+    train_async,
+    worker_round_robin,
+)
+from repro.core.simulator import ClusterSpec, simulate_async, simulate_sync
+from repro.core.baselines import (
+    speedup_model_async,
+    speedup_model_dimboost,
+    speedup_model_sync,
+)
+
+__all__ = [
+    "SGBDTConfig",
+    "TrainState",
+    "init_state",
+    "train_serial",
+    "sgbdt_round",
+    "constant_delay",
+    "worker_round_robin",
+    "train_async",
+    "ClusterSpec",
+    "simulate_async",
+    "simulate_sync",
+    "speedup_model_async",
+    "speedup_model_sync",
+    "speedup_model_dimboost",
+]

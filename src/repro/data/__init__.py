@@ -1,0 +1,27 @@
+"""Data substrate: synthetic dataset generators + Bernoulli importance sampling."""
+from repro.data.synthetic import (
+    DatasetSpec,
+    make_dense_low_diversity,
+    make_sparse_classification,
+    make_sparse_regression,
+    PAPER_DATASETS,
+)
+from repro.data.pipeline import TokenPipeline, pack_documents
+from repro.data.sampling import (
+    bernoulli_weights,
+    diversity_stats,
+    overlap_probability,
+)
+
+__all__ = [
+    "DatasetSpec",
+    "make_dense_low_diversity",
+    "make_sparse_classification",
+    "make_sparse_regression",
+    "PAPER_DATASETS",
+    "bernoulli_weights",
+    "diversity_stats",
+    "overlap_probability",
+    "TokenPipeline",
+    "pack_documents",
+]

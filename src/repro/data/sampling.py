@@ -1,0 +1,65 @@
+"""Bernoulli importance sampling — the paper's random variable Q.
+
+Each of the m_i copies of distinct sample i carries an independent Bernoulli
+Q_ij with P(Q_ij = 1) = R_ij; the sampled objective weights sample i by
+m'_i = sum_j Q_ij / R_ij, an unbiased estimator of m_i (E[m'_i] = m_i, the
+keystone of Corollary 1). With uniform rates this is Binomial(m_i, R) / R.
+
+Also here: the observable the scalability theory reads — the sparsity of the
+Q' vector (Q'_i = any copy drawn), and closed forms for Delta and rho.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bernoulli_weights(
+    rng: jax.Array,
+    rate: jax.Array | float,
+    multiplicity: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Draw one sampling round.
+
+    Returns (m_prime, q_any): the importance weights m'_i (N,) f32 and the
+    Q'_i indicator (N,) bool. E[m_prime] = multiplicity.
+    """
+    rate = jnp.broadcast_to(jnp.asarray(rate, jnp.float32), multiplicity.shape)
+    counts = jax.random.binomial(rng, multiplicity, rate)
+    m_prime = counts / rate
+    return m_prime.astype(jnp.float32), counts > 0
+
+
+def q_sparsity(q_any: jax.Array) -> jax.Array:
+    """Fraction of distinct samples present in the subdataset (density of Q')."""
+    return jnp.mean(q_any.astype(jnp.float32))
+
+
+def delta_max(rate, multiplicity: jax.Array) -> jax.Array:
+    """Delta = max_i P(Q'_i = 1) = max_i 1 - (1 - R)^{m_i} (closed form)."""
+    rate = jnp.asarray(rate, jnp.float32)
+    return jnp.max(1.0 - (1.0 - rate) ** multiplicity)
+
+
+def overlap_probability(rate, multiplicity: jax.Array) -> jax.Array:
+    """rho = P(two independent subdatasets intersect).
+
+    P(i in both) = p_i^2 with p_i = 1 - (1-R)^{m_i};
+    rho = 1 - prod_i (1 - p_i^2). High diversity (m_i = 1, small R) => small
+    per-sample p_i but the product over many i can still be large — exactly
+    the tension the paper's requirements describe.
+    """
+    rate = jnp.asarray(rate, jnp.float32)
+    p = 1.0 - (1.0 - rate) ** multiplicity
+    return 1.0 - jnp.exp(jnp.sum(jnp.log1p(-jnp.minimum(p * p, 1.0 - 1e-7))))
+
+
+def diversity_stats(rate, multiplicity: jax.Array) -> dict[str, jax.Array]:
+    """The asynch-SGBDT-requirement observables for a (dataset, rate) pair."""
+    return {
+        "delta": delta_max(rate, multiplicity),
+        "rho": overlap_probability(rate, multiplicity),
+        "expected_subdataset_density": jnp.mean(
+            1.0 - (1.0 - jnp.asarray(rate, jnp.float32)) ** multiplicity
+        ),
+    }

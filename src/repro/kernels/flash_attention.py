@@ -1,0 +1,358 @@
+"""Pallas TPU kernel: fused (flash) attention — online softmax, O(S) memory.
+
+Why it exists here: the roofline analysis (EXPERIMENTS.md §Perf C4) shows
+the train/prefill memory term is dominated by unfused softmax traffic —
+XLA materializes the (q_chunk x S_kv) score tensor in f32 and re-reads it
+for max/sub/exp/sum/div. This kernel keeps one (block_q x block_k) tile in
+VMEM, carries the running max m and normalizer l per query row, and never
+writes scores to HBM: HBM traffic drops from O(S^2) to O(S·d) per head.
+
+Layout: q (BH, Sq, d), k/v (BKV, Sk, d) with GQA folded into the grid's
+head axis (index_map h -> h // group for k/v — no repeated KV in memory).
+Grid (BH, nq, nk); the kv axis is innermost and accumulates into VMEM
+scratch (acc, m, l); the final kv step normalizes and writes the output
+block. MXU alignment: block_q/block_k default 128, d padded by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,      # (1, bq, d)
+    k_ref,      # (1, bk, d)
+    v_ref,      # (1, bk, d)
+    o_ref,      # (1, bq, d)
+    lse_ref,    # (1, bq) f32 — per-row logsumexp, saved for the backward
+    acc_ref,    # VMEM scratch (bq, d) f32
+    m_ref,      # VMEM scratch (bq,) f32
+    l_ref,      # VMEM scratch (bq,) f32
+    *,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+    sm_scale: float,
+    seq_k: int,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0
+    )
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1
+    )
+
+    def compute():
+        q = q_ref[0]                                   # (bq, d)
+        k = k_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * sm_scale                                   # (bq, bk)
+        valid = k_pos < seq_k
+        if causal:
+            valid &= q_pos >= k_pos
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)                # (bq,)
+        p = jnp.exp(s - m_new[:, None])                # (bq, bk)
+        p = jnp.where(valid, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
+            p.astype(v_ref.dtype), v_ref[0],
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    if causal:
+        # whole block above the diagonal -> nothing to do
+        @pl.when(iq * block_q + block_q - 1 >= ik * block_k)
+        def _():
+            compute()
+    else:
+        compute()
+
+    @pl.when(ik == pl.num_programs(2) - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        lse_ref[0] = m_ref[...] + jnp.log(l)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "block_q", "block_k", "group", "interpret", "seq_k"
+    ),
+)
+def flash_attention_pallas(
+    q: jax.Array,      # (BH, Sq, d) — batch*heads flattened
+    k: jax.Array,      # (BKV, Sk, d) — batch*kv_heads flattened
+    v: jax.Array,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    group: int = 1,    # q heads per kv head (GQA); BH = BKV * group
+    interpret: bool = True,
+    seq_k: int | None = None,   # true (pre-padding) kv length for masking
+) -> jax.Array:
+    bh, sq, d = q.shape
+    bkv, sk, _ = k.shape
+    assert bh == bkv * group
+    assert sq % block_q == 0 and sk % block_k == 0, "wrapper must pad"
+    nq, nk = sq // block_q, sk // block_k
+    sm_scale = 1.0 / (d ** 0.5)
+    if seq_k is None:
+        seq_k = sk
+
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel, causal=causal, block_q=block_q, block_k=block_k,
+            sm_scale=sm_scale, seq_k=seq_k,
+        ),
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, iq, ik: (h, iq, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, iq, ik, g=group: (h // g, ik, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, iq, ik, g=group: (h // g, ik, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, iq, ik: (h, iq, 0)),
+            pl.BlockSpec((1, block_q), lambda h, iq, ik: (h, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, sq), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+# ------------------------------------------------------------------ backward
+# Standard flash backward (Dao et al.):
+#   P_ij  = exp(s_ij - L_i),       s = scale * q k^T
+#   D_i   = sum_d do_id * o_id
+#   dS    = P * (do v^T - D)
+#   dq_i  = scale * sum_j dS_ij k_j        (kernel 1: grid over q blocks)
+#   dk_j  = scale * sum_i dS_ij q_i        (kernel 2: grid over kv blocks)
+#   dv_j  =         sum_i P_ij  do_i
+# Two kernels so each output block has a single writer (no atomics on TPU);
+# both recompute P from (q, k, L) — nothing quadratic is ever stored.
+
+
+def _flash_bwd_dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+    dq_ref,
+    acc_ref,
+    *, causal, block_q, block_k, sm_scale, seq_k, seq_q,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    def compute():
+        q = q_ref[0]
+        k = k_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale
+        valid = (k_pos < seq_k) & (q_pos < seq_q)
+        if causal:
+            valid &= q_pos >= k_pos
+        p = jnp.where(valid, jnp.exp(s - lse_ref[0][:, None]), 0.0)
+        dp = jax.lax.dot_general(
+            do_ref[0], v_ref[0], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        ds = p * (dp - delta_ref[0][:, None])
+        acc_ref[...] += sm_scale * jax.lax.dot(
+            ds.astype(k.dtype), k, preferred_element_type=jnp.float32
+        )
+
+    if causal:
+        @pl.when(iq * block_q + block_q - 1 >= ik * block_k)
+        def _():
+            compute()
+    else:
+        compute()
+
+    @pl.when(ik == pl.num_programs(2) - 1)
+    def _done():
+        dq_ref[0] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _flash_bwd_dkv_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+    dk_ref, dv_ref,
+    dk_acc, dv_acc,
+    *, causal, block_q, block_k, sm_scale, seq_k, seq_q, group,
+):
+    # grid: (BKV_head, nk, nq * group) — innermost axis walks all q blocks
+    # of every q-head in this kv head's group, accumulating dk/dv.
+    inner = pl.program_id(2)
+    ik = pl.program_id(1)
+    nq = pl.num_programs(2) // group
+    iq = inner % nq
+
+    @pl.when(inner == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    def compute():
+        q = q_ref[0]
+        k = k_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale
+        valid = (k_pos < seq_k) & (q_pos < seq_q)
+        if causal:
+            valid &= q_pos >= k_pos
+        p = jnp.where(valid, jnp.exp(s - lse_ref[0][:, None]), 0.0)
+        do = do_ref[0]
+        dv_acc[...] += jax.lax.dot_general(
+            p.astype(do.dtype), do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        dp = jax.lax.dot_general(
+            do, v_ref[0], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        ds = p * (dp - delta_ref[0][:, None])
+        dk_acc[...] += sm_scale * jax.lax.dot_general(
+            ds.astype(q.dtype), q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    if causal:
+        @pl.when(iq * block_q + block_q - 1 >= ik * block_k)
+        def _():
+            compute()
+    else:
+        compute()
+
+    @pl.when(inner == pl.num_programs(2) - 1)
+    def _done():
+        dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "block_q", "block_k", "group", "interpret", "seq_k",
+        "seq_q",
+    ),
+)
+def flash_attention_bwd_pallas(
+    q, k, v, o, lse, do,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    group: int = 1,
+    interpret: bool = True,
+    seq_k: int | None = None,
+    seq_q: int | None = None,
+):
+    """-> (dq, dk, dv). Shapes as the forward; lse (BH, Sq) f32."""
+    bh, sq, d = q.shape
+    bkv, sk, _ = k.shape
+    nq, nk = sq // block_q, sk // block_k
+    sm_scale = 1.0 / (d ** 0.5)
+    if seq_k is None:
+        seq_k = sk
+    if seq_q is None:
+        seq_q = sq
+    delta = jnp.sum(
+        do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1
+    )  # (BH, Sq)
+
+    dq = pl.pallas_call(
+        functools.partial(
+            _flash_bwd_dq_kernel, causal=causal, block_q=block_q,
+            block_k=block_k, sm_scale=sm_scale, seq_k=seq_k, seq_q=seq_q,
+        ),
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, iq, ik: (h, iq, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, iq, ik, g=group: (h // g, ik, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, iq, ik, g=group: (h // g, ik, 0)),
+            pl.BlockSpec((1, block_q, d), lambda h, iq, ik: (h, iq, 0)),
+            pl.BlockSpec((1, block_q), lambda h, iq, ik: (h, iq)),
+            pl.BlockSpec((1, block_q), lambda h, iq, ik: (h, iq)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda h, iq, ik: (h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    # dk/dv: one kv-head per grid row; inner axis = (q-head in group, q block)
+    def _qh(h, inner, nq_=nq, g=group):
+        return h * g + inner // nq_
+
+    dk, dv = pl.pallas_call(
+        functools.partial(
+            _flash_bwd_dkv_kernel, causal=causal, block_q=block_q,
+            block_k=block_k, sm_scale=sm_scale, seq_k=seq_k, seq_q=seq_q,
+            group=group,
+        ),
+        grid=(bkv, nk, nq * group),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d),
+                         lambda h, ik, inner: (_qh(h, inner), inner % nq, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, ik, inner: (h, ik, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, ik, inner: (h, ik, 0)),
+            pl.BlockSpec((1, block_q, d),
+                         lambda h, ik, inner: (_qh(h, inner), inner % nq, 0)),
+            pl.BlockSpec((1, block_q),
+                         lambda h, ik, inner: (_qh(h, inner), inner % nq)),
+            pl.BlockSpec((1, block_q),
+                         lambda h, ik, inner: (_qh(h, inner), inner % nq)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k, d), lambda h, ik, inner: (h, ik, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, ik, inner: (h, ik, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bkv, sk, d), k.dtype),
+            jax.ShapeDtypeStruct((bkv, sk, d), v.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_k, d), jnp.float32),
+            pltpu.VMEM((block_k, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: gradient/hessian histograms as one-hot MXU matmuls.
+
+LightGBM's (and every GPU GBDT's) hot loop scatter-adds grad/hess into
+per-(node, feature, bin) buckets — atomics into shared memory. TPUs have no
+atomics and weak scatter throughput, but a 128x128 systolic MXU. We therefore
+reformulate the whole level-histogram as a single dense contraction:
+
+    out[r, f*B + b] = sum_s GH[r, s] * onehot[s, f*B + b]
+
+where row r = 2*node + (0: grad, 1: hess), GH masks each sample's grad/hess
+onto its current tree node, and onehot marks the sample's bin for feature f.
+Both factor matrices are built on the fly inside VMEM from integer inputs —
+nothing of size (N, F*B) ever touches HBM.
+
+Grid: (feature_blocks, sample_blocks); sample axis is innermost and
+accumulates into the same output block (standard Pallas reduce pattern).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hist_kernel(
+    bins_ref,   # (S_blk, F_blk) int32
+    node_ref,   # (S_blk, 1) int32, -1 = inactive
+    grad_ref,   # (S_blk, 1) f32
+    hess_ref,   # (S_blk, 1) f32
+    out_ref,    # (2*L, F_blk*B) f32
+    *,
+    n_nodes: int,
+    n_bins: int,
+):
+    s_blk, f_blk = bins_ref.shape
+    rows = 2 * n_nodes
+
+    sample_axis = pl.program_id(1)
+
+    @pl.when(sample_axis == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    node = node_ref[:, 0]                       # (S,)
+    grad = grad_ref[:, 0]
+    hess = hess_ref[:, 0]
+
+    # GH: (2L, S). Row r selects samples on node r//2; even rows carry grad,
+    # odd rows carry hess. Inactive samples (node < 0) never match.
+    row_node = jax.lax.broadcasted_iota(jnp.int32, (rows, s_blk), 0) // 2
+    row_is_h = jax.lax.broadcasted_iota(jnp.int32, (rows, s_blk), 0) % 2
+    gh_val = jnp.where(row_is_h == 0, grad[None, :], hess[None, :])
+    gh = jnp.where(row_node == node[None, :], gh_val, 0.0)
+
+    # One-hot: (S, F_blk*B), onehot[s, f*B + b] = 1{bins[s, f] == b}.
+    bin_iota = jax.lax.broadcasted_iota(jnp.int32, (s_blk, f_blk, n_bins), 2)
+    onehot = (bins_ref[...][..., None] == bin_iota).astype(jnp.float32)
+    onehot = onehot.reshape(s_blk, f_blk * n_bins)
+
+    out_ref[...] += jax.lax.dot(
+        gh, onehot, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_nodes", "n_bins", "sample_block", "feature_block", "interpret"),
+)
+def histogram_pallas(
+    bins: jax.Array,       # (N, F) int32 — N % sample_block == 0 (wrapper pads)
+    node_ids: jax.Array,   # (N,) int32
+    grad: jax.Array,       # (N,) f32
+    hess: jax.Array,       # (N,) f32
+    n_nodes: int,
+    n_bins: int,
+    sample_block: int = 512,
+    feature_block: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns (2, n_nodes, F, n_bins) f32 histograms. See module docstring."""
+    n, f = bins.shape
+    assert n % sample_block == 0, "wrapper must pad samples"
+    assert f % feature_block == 0, "wrapper must pad features"
+    ns, nf = n // sample_block, f // feature_block
+    rows = 2 * n_nodes
+
+    out = pl.pallas_call(
+        functools.partial(_hist_kernel, n_nodes=n_nodes, n_bins=n_bins),
+        grid=(nf, ns),
+        in_specs=[
+            pl.BlockSpec((sample_block, feature_block), lambda fb, sb: (sb, fb)),
+            pl.BlockSpec((sample_block, 1), lambda fb, sb: (sb, 0)),
+            pl.BlockSpec((sample_block, 1), lambda fb, sb: (sb, 0)),
+            pl.BlockSpec((sample_block, 1), lambda fb, sb: (sb, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (rows, feature_block * n_bins), lambda fb, sb: (0, fb)
+        ),
+        out_shape=jax.ShapeDtypeStruct((rows, f * n_bins), jnp.float32),
+        interpret=interpret,
+    )(
+        bins,
+        node_ids[:, None],
+        grad[:, None],
+        hess[:, None],
+    )
+    # rows are (2*node + grad/hess) -> (node, gh, feature, bin) -> (gh, node, f, b)
+    return out.reshape(n_nodes, 2, f, n_bins).transpose(1, 0, 2, 3)

@@ -1,0 +1,202 @@
+"""Jit'd public entry points for the kernels, with backend dispatch.
+
+``backend='ref'`` runs the pure-jnp oracle (always available, and what a CPU
+production deployment would use); ``'pallas'`` runs the TPU kernels. On this
+CPU container Pallas executes via ``interpret=True``; on a real TPU the same
+call sites compile to Mosaic. ``'auto'`` picks pallas on TPU, ref elsewhere.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.histogram import histogram_pallas
+from repro.kernels.split_scan import split_gain_pallas
+
+
+def _default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _pad_to(x: jax.Array, multiple: int, axis: int, fill) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def build_histogram(
+    bins: jax.Array,
+    node_ids: jax.Array,
+    grad: jax.Array,
+    hess: jax.Array,
+    n_nodes: int,
+    n_bins: int,
+    backend: str = "auto",
+    sample_block: int = 512,
+    feature_block: int = 8,
+) -> jax.Array:
+    """(2, n_nodes, F, n_bins) grad/hess histograms. See kernels/histogram.py."""
+    if backend == "auto":
+        backend = _default_backend()
+    if backend == "ref":
+        return _ref.histogram_ref(bins, node_ids, grad, hess, n_nodes, n_bins)
+    if backend != "pallas":
+        raise ValueError(f"unknown backend {backend!r}")
+    interpret = jax.default_backend() != "tpu"
+    n_feat = bins.shape[1]
+    fb = min(feature_block, n_feat)
+    binsp = _pad_to(_pad_to(bins, sample_block, 0, 0), fb, 1, 0)
+    nodep = _pad_to(node_ids, sample_block, 0, -1)  # padded samples inactive
+    gradp = _pad_to(grad, sample_block, 0, 0.0)
+    hessp = _pad_to(hess, sample_block, 0, 0.0)
+    out = histogram_pallas(
+        binsp, nodep, gradp, hessp, n_nodes, n_bins,
+        sample_block=sample_block, feature_block=fb, interpret=interpret,
+    )
+    return out[:, :, :n_feat, :]
+
+
+def split_gain(
+    hist: jax.Array,
+    lam,
+    min_child_hess,
+    backend: str = "auto",
+    node_block: int = 8,
+    feature_block: int = 8,
+) -> jax.Array:
+    """Gain surface (L, F, B), -inf where invalid."""
+    if backend == "auto":
+        backend = _default_backend()
+    lam = jnp.asarray(lam, jnp.float32)
+    minh = jnp.asarray(min_child_hess, jnp.float32)
+    if backend == "ref":
+        return _split_gain_surface_ref(hist, lam, minh)
+    if backend != "pallas":
+        raise ValueError(f"unknown backend {backend!r}")
+    interpret = jax.default_backend() != "tpu"
+    _, l, f, _ = hist.shape
+    lb = min(node_block, l)
+    fb = min(feature_block, f)
+    histp = _pad_to(_pad_to(hist, lb, 1, 0.0), fb, 2, 0.0)
+    out = split_gain_pallas(
+        histp, lam, minh, node_block=lb, feature_block=fb, interpret=interpret
+    )
+    return out[:l, :f, :]
+
+
+@jax.jit
+def _split_gain_surface_ref(hist, lam, min_h):
+    """Same surface as the kernel, via jnp (shared with split_scan_ref)."""
+    g, h = hist[0], hist[1]
+    gl = jnp.cumsum(g, axis=-1)
+    hl = jnp.cumsum(h, axis=-1)
+    gt, ht = gl[..., -1:], hl[..., -1:]
+    gr, hr = gt - gl, ht - hl
+    gain = gl**2 / (hl + lam) + gr**2 / (hr + lam) - gt**2 / (ht + lam)
+    valid = (hl >= min_h) & (hr >= min_h)
+    valid = valid.at[..., -1].set(False)
+    return jnp.where(valid, gain, -jnp.inf)
+
+
+def best_split(
+    hist: jax.Array, lam, min_child_hess, backend: str = "auto"
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(best_gain (L,), feature (L,), bin (L,)) — argmax over the gain surface."""
+    gain = split_gain(hist, lam, min_child_hess, backend=backend)
+    nb = gain.shape[-1]
+    flat = gain.reshape(gain.shape[0], -1)
+    idx = jnp.argmax(flat, axis=-1)
+    best = jnp.take_along_axis(flat, idx[:, None], axis=-1)[:, 0]
+    return best, (idx // nb).astype(jnp.int32), (idx % nb).astype(jnp.int32)
+
+
+apply_forest = _ref.apply_forest_ref  # gather-bound; pure-jnp is the right form
+
+
+def _flash_call(qf, kf, vf, causal, group, block_q, block_k):
+    """Pad to blocks, run the forward kernel, return (out, lse) unpadded."""
+    from repro.kernels.flash_attention import flash_attention_pallas
+
+    sq, sk = qf.shape[1], kf.shape[1]
+    interpret = jax.default_backend() != "tpu"
+    bq, bk = min(block_q, sq), min(block_k, sk)
+    qp = _pad_to(qf, bq, 1, 0.0)
+    kp = _pad_to(kf, bk, 1, 0.0)
+    vp = _pad_to(vf, bk, 1, 0.0)
+    out, lse = flash_attention_pallas(
+        qp, kp, vp, causal=causal, block_q=bq, block_k=bk,
+        group=group, interpret=interpret, seq_k=sk,
+    )
+    return out[:, :sq], lse[:, :sq]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_fwd_only(qf, kf, vf, causal, group, block_q, block_k):
+    out, _ = _flash_call(qf, kf, vf, causal, group, block_q, block_k)
+    return out
+
+
+def _flash_vjp_fwd(qf, kf, vf, causal, group, block_q, block_k):
+    out, lse = _flash_call(qf, kf, vf, causal, group, block_q, block_k)
+    return out, (qf, kf, vf, out, lse)
+
+
+def _flash_vjp_bwd(causal, group, block_q, block_k, res, g):
+    """Fused Pallas backward (dq / dk+dv kernels) — recomputes P tiles from
+    (q, k, lse); nothing quadratic ever hits HBM in either direction."""
+    from repro.kernels.flash_attention import flash_attention_bwd_pallas
+
+    qf, kf, vf, out, lse = res
+    sq, sk = qf.shape[1], kf.shape[1]
+    interpret = jax.default_backend() != "tpu"
+    bq, bk = min(block_q, sq), min(block_k, sk)
+    qp = _pad_to(qf, bq, 1, 0.0)
+    kp = _pad_to(kf, bk, 1, 0.0)
+    vp = _pad_to(vf, bk, 1, 0.0)
+    op = _pad_to(out, bq, 1, 0.0)
+    gp = _pad_to(g, bq, 1, 0.0)
+    lp = _pad_to(lse, bq, 1, 0.0)
+    dq, dk, dv = flash_attention_bwd_pallas(
+        qp, kp, vp, op, lp, gp,
+        causal=causal, block_q=bq, block_k=bk, group=group,
+        interpret=interpret, seq_k=sk, seq_q=sq,
+    )
+    return dq[:, :sq], dk[:, :sk], dv[:, :sk]
+
+
+_flash_fwd_only.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def flash_attention(
+    q: jax.Array,       # (B, Sq, H, hd)
+    k: jax.Array,       # (B, Sk, KV, hd)
+    v: jax.Array,
+    causal: bool = True,
+    backend: str = "auto",
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """Fused attention entry point (model-layout in/out). Pads Sq/Sk to the
+    block sizes and flattens (B, H) into the kernel's head-grid axis.
+    Differentiable: forward is the Pallas kernel (O(S) memory), backward
+    recomputes through the jnp oracle (see _flash_vjp_bwd)."""
+    if backend == "auto":
+        backend = _default_backend()
+    b, sq, h, hd = q.shape
+    _, sk, kv, _ = k.shape
+    group = h // kv
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kv, sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kv, sk, hd)
+    if backend == "ref":
+        out = _ref.flash_attention_ref(qf, kf, vf, causal=causal, group=group)
+    else:
+        out = _flash_fwd_only(qf, kf, vf, causal, group, block_q, block_k)
+    return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,125 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics of record: kernels must match them to float32
+tolerance across the shape/dtype sweeps in tests/test_kernels.py. They are
+also the fallback backend on platforms without Pallas lowering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins"))
+def histogram_ref(
+    bins: jax.Array,      # (N, F) int32 bin ids
+    node_ids: jax.Array,  # (N,) int32 current node per sample, -1 = inactive
+    grad: jax.Array,      # (N,) f32 weighted gradient  (m'_i * l'_i)
+    hess: jax.Array,      # (N,) f32 weighted hessian / count weight
+    n_nodes: int,
+    n_bins: int,
+) -> jax.Array:
+    """Gradient/hessian histograms: out[0|1, node, f, b] = sum over samples.
+
+    Scatter-add formulation via segment_sum — the LightGBM semantics.
+    Inactive samples (node_id == -1 or sampled out with weight 0) contribute
+    nothing.
+    """
+    n, f = bins.shape
+    active = node_ids >= 0
+    node = jnp.where(active, node_ids, 0)
+    # segment id per (sample, feature): node * F * B + f * B + bin
+    seg = (node[:, None] * f + jnp.arange(f)[None, :]) * n_bins + bins
+    gmat = jnp.where(active, grad, 0.0)[:, None] * jnp.ones((1, f), grad.dtype)
+    hmat = jnp.where(active, hess, 0.0)[:, None] * jnp.ones((1, f), hess.dtype)
+    num = n_nodes * f * n_bins
+    hg = jax.ops.segment_sum(gmat.reshape(-1), seg.reshape(-1), num_segments=num)
+    hh = jax.ops.segment_sum(hmat.reshape(-1), seg.reshape(-1), num_segments=num)
+    out = jnp.stack([hg, hh]).reshape(2, n_nodes, f, n_bins)
+    return out.astype(jnp.float32)
+
+
+@jax.jit
+def split_scan_ref(
+    hist: jax.Array,      # (2, L, F, B) f32 grad/hess histograms
+    lam: jax.Array,       # scalar L2 regularizer
+    min_child_hess: jax.Array,  # scalar: both children need >= this hessian mass
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Best split per node from histograms.
+
+    Returns (best_gain (L,), best_feature (L,) int32, best_bin (L,) int32).
+    gain = GL^2/(HL+lam) + GR^2/(HR+lam) - G^2/(H+lam); splitting at bin b
+    sends bins <= b left. The last bin is not a valid split point.
+    """
+    g, h = hist[0], hist[1]                       # (L, F, B)
+    gl = jnp.cumsum(g, axis=-1)                   # left sums, inclusive
+    hl = jnp.cumsum(h, axis=-1)
+    gt = gl[..., -1:]                             # totals (L, F, 1)
+    ht = hl[..., -1:]
+    gr = gt - gl
+    hr = ht - hl
+    parent = gt**2 / (ht + lam)
+    gain = gl**2 / (hl + lam) + gr**2 / (hr + lam) - parent  # (L, F, B)
+    valid = (hl >= min_child_hess) & (hr >= min_child_hess)
+    valid = valid.at[..., -1].set(False)
+    gain = jnp.where(valid, gain, -jnp.inf)
+    flat = gain.reshape(gain.shape[0], -1)        # (L, F*B)
+    idx = jnp.argmax(flat, axis=-1)
+    best_gain = jnp.take_along_axis(flat, idx[:, None], axis=-1)[:, 0]
+    nb = hist.shape[-1]
+    return best_gain, (idx // nb).astype(jnp.int32), (idx % nb).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "group"))
+def flash_attention_ref(
+    q: jax.Array,      # (BH, Sq, d)
+    k: jax.Array,      # (BKV, Sk, d)
+    v: jax.Array,
+    causal: bool = True,
+    group: int = 1,
+) -> jax.Array:
+    """Plain softmax attention — the oracle for the flash kernel."""
+    bh, sq, d = q.shape
+    if group > 1:
+        k = jnp.repeat(k, group, axis=0)
+        v = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / jnp.sqrt(d)
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, k.shape[1]), bool))
+        s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def apply_forest_ref(
+    bins: jax.Array,        # (N, F) int32
+    feature: jax.Array,     # (T, 2^d - 1) int32
+    threshold: jax.Array,   # (T, 2^d - 1) int32
+    leaf_value: jax.Array,  # (T, 2^d) f32
+    depth: int,
+) -> jax.Array:
+    """Sum of per-tree predictions, (N,) f32 — the forest F(x) evaluation."""
+
+    def one_tree(carry, tree):
+        feat, thr, leaves = tree
+        node = jnp.zeros((bins.shape[0],), jnp.int32)
+
+        def step(_, node):
+            f = jnp.take(feat, node)
+            t = jnp.take(thr, node)
+            v = jnp.take_along_axis(bins, f[:, None], axis=1)[:, 0]
+            return 2 * node + 1 + (v > t).astype(jnp.int32)
+
+        node = jax.lax.fori_loop(0, depth, step, node)
+        leaf = node - ((1 << depth) - 1)
+        return carry + jnp.take(leaves, leaf), None
+
+    total, _ = jax.lax.scan(
+        one_tree, jnp.zeros((bins.shape[0],), jnp.float32),
+        (feature, threshold, leaf_value),
+    )
+    return total

@@ -1,0 +1,36 @@
+"""Launch substrate: meshes, input shapes, step builders, dry-run."""
+from repro.launch.mesh import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    make_host_mesh,
+    make_production_mesh,
+)
+from repro.launch.shapes import (
+    SHAPES,
+    ShapeSpec,
+    batch_inputs,
+    decode_inputs,
+    shape_skip_reason,
+)
+from repro.launch.steps import (
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+
+__all__ = [
+    "HBM_BW",
+    "ICI_BW",
+    "PEAK_FLOPS_BF16",
+    "make_host_mesh",
+    "make_production_mesh",
+    "SHAPES",
+    "ShapeSpec",
+    "batch_inputs",
+    "decode_inputs",
+    "shape_skip_reason",
+    "make_decode_step",
+    "make_prefill_step",
+    "make_train_step",
+]

@@ -1,0 +1,265 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) and emit
+the roofline inputs.
+
+The two lines above MUST run before any jax import — jax locks the device
+count at first init. Everything below is ordinary code.
+
+Usage:
+    python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh both
+    python -m repro.launch.dryrun --all --mesh single --out experiments/dryrun
+
+Artifacts: one JSON per combination with memory_analysis, cost_analysis,
+loop-aware HLO stats (dot flops / HBM proxy / collective bytes per kind),
+and the analytic MODEL_FLOPS for the utilization ratio.
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+import repro.sharding as sharding
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import (
+    SHAPES,
+    ShapeSpec,
+    batch_inputs,
+    decode_inputs,
+    shape_skip_reason,
+)
+from repro.launch.steps import make_decode_step, make_prefill_step, make_train_step
+from repro.models import abstract_params
+from repro.models.config import ModelConfig
+from repro.optim import adamw, cosine_schedule
+
+# Per-arch gradient-accumulation defaults: keeps per-device activation
+# memory bounded at train_4k's 1M-token global batch. The big-d_model archs
+# need microbatch 16 (one sequence per data shard).
+TRAIN_ACCUM = 8
+TRAIN_ACCUM_BY_ARCH = {
+    "llama-3.2-vision-90b": 16,
+    "dbrx-132b": 16,
+}
+
+
+def _shardings(mesh, specs):
+    return sharding.tree_shardings(mesh, specs)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D train / 2*N*D forward-only, N = active."""
+    n = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    per_tok = 6 * n if shape.kind == "train" else 2 * n
+    return float(per_tok) * tokens
+
+
+def lower_one(
+    cfg: ModelConfig,
+    shape: ShapeSpec,
+    mesh,
+    accum: int = TRAIN_ACCUM,
+    donate: bool = True,
+):
+    """Build + lower the right step for (cfg, shape) on ``mesh``.
+    Returns (lowered, meta) — compile is the caller's business."""
+    baxes = sharding.batch_axes(mesh)
+    pspecs = sharding.param_specs(cfg, mesh)
+    pshard = _shardings(mesh, pspecs)
+    params_abs = abstract_params(cfg)
+
+    if shape.kind == "train":
+        # microbatch must stay divisible by the data-parallel degree
+        dp = 1
+        for a in baxes:
+            dp *= dict(mesh.shape)[a]
+        accum = min(accum, max(1, shape.global_batch // dp))
+        opt = adamw(
+            cosine_schedule(3e-4, 100, 10_000), weight_decay=0.1, max_grad_norm=1.0
+        )
+        ostate_abs = jax.eval_shape(opt.init, params_abs)
+        ospecs = sharding.optimizer_state_specs(ostate_abs, pspecs)
+        oshard = _shardings(mesh, ospecs)
+        batch_abs = batch_inputs(cfg, shape)
+        bshard = _shardings(
+            mesh, sharding.data_specs(cfg, mesh, shape.global_batch)
+        )
+        # weights spec: replicated-over-model, batch over data axes
+        bshard["weights"] = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(
+                sharding.divisible_batch_axes(mesh, shape.global_batch)
+                or None
+            )
+        )
+        rng_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        rshard = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        step = make_train_step(
+            cfg, opt, mesh, baxes, accum=accum, sampling_rate=0.8,
+            grad_specs=pspecs,
+        )
+        fn = jax.jit(
+            step,
+            in_shardings=(pshard, oshard, bshard, rshard),
+            out_shardings=(pshard, oshard, None),
+            donate_argnums=(0, 1) if donate else (),
+        )
+        lowered = fn.lower(params_abs, ostate_abs, batch_abs, rng_abs)
+    elif shape.kind == "prefill":
+        batch_abs = batch_inputs(cfg, shape)
+        bshard = _shardings(
+            mesh, sharding.data_specs(cfg, mesh, shape.global_batch)
+        )
+        bshard.pop("labels", None)
+        cspecs = sharding.cache_specs(cfg, mesh, shape.global_batch, shape.seq_len)
+        cshard = _shardings(mesh, cspecs)
+        step = make_prefill_step(cfg, mesh, baxes)
+        fn = jax.jit(
+            step,
+            in_shardings=(pshard, bshard),
+            out_shardings=(None, None, cshard),
+        )
+        lowered = fn.lower(params_abs, batch_abs)
+    else:  # decode
+        # Serving placement: pure TP (+2D ff), params replicated over the
+        # batch axes — drops the per-token FSDP all-gather (§Perf).
+        pspecs = sharding.param_specs(
+            cfg, mesh, rules=sharding.serving_rules()
+        )
+        pshard = _shardings(mesh, pspecs)
+        tok_abs, cache_abs = decode_inputs(cfg, shape)
+        cspecs = sharding.cache_specs(cfg, mesh, shape.global_batch, shape.seq_len)
+        cshard = _shardings(mesh, cspecs)
+        tshard = _shardings(
+            mesh,
+            jax.sharding.PartitionSpec(
+                sharding.divisible_batch_axes(mesh, shape.global_batch)
+                or None
+            ),
+        )
+        step = make_decode_step(cfg, mesh, baxes)
+        fn = jax.jit(
+            step,
+            in_shardings=(pshard, tshard, cshard),
+            out_shardings=(None, cshard),
+            donate_argnums=(2,) if donate else (),
+        )
+        lowered = fn.lower(params_abs, tok_abs["tokens"], cache_abs)
+    return lowered
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, out_dir: pathlib.Path,
+            accum: int | None = None, save_hlo: bool = False) -> dict:
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    if accum is None:
+        accum = TRAIN_ACCUM_BY_ARCH.get(arch, TRAIN_ACCUM)
+    rec: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "accum": accum if shape.kind == "train" else None,
+    }
+    skip = shape_skip_reason(cfg, shape)
+    if skip:
+        rec.update(status="skipped", reason=skip)
+        return _save(rec, out_dir)
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        t0 = time.time()
+        lowered = lower_one(cfg, shape, mesh, accum=accum)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo_txt = compiled.as_text()
+        stats = hlo_analysis.analyze_hlo(hlo_txt)
+        if save_hlo:
+            (out_dir / f"{arch}__{shape_name}__{mesh_kind}.hlo.txt").write_text(
+                hlo_txt
+            )
+        rec.update(
+            status="ok",
+            lower_s=round(t1 - t0, 2),
+            compile_s=round(t2 - t1, 2),
+            n_devices=mesh.devices.size,
+            memory={
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+            },
+            cost_analysis={
+                "flops": cost.get("flops", 0.0),
+                "bytes_accessed": cost.get("bytes accessed", 0.0),
+            },
+            hlo=stats.to_dict(),
+            model_flops=model_flops(cfg, SHAPES[shape_name]),
+            param_count=cfg.param_count(),
+            active_param_count=cfg.active_param_count(),
+        )
+    except Exception as e:  # noqa: BLE001 — a dry-run failure IS the signal
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    return _save(rec, out_dir)
+
+
+def _save(rec: dict, out_dir: pathlib.Path) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    path.write_text(json.dumps(rec, indent=1, default=float))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    archs = list(configs.ALIASES) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                rec = run_one(arch, shape, mesh_kind, out_dir,
+                              accum=args.accum, save_hlo=args.save_hlo)
+                tag = rec["status"]
+                n_ok += tag == "ok"
+                n_skip += tag == "skipped"
+                n_err += tag == "error"
+                extra = ""
+                if tag == "ok":
+                    m = rec["memory"]
+                    gb = (m["argument_bytes"] + m["temp_bytes"]) / 2**30
+                    extra = (f"args+temp={gb:.2f} GiB/dev "
+                             f"compile={rec['compile_s']}s "
+                             f"coll={rec['hlo']['total_collective_bytes']/1e9:.2f}GB")
+                elif tag == "error":
+                    extra = rec["error"][:160]
+                elif tag == "skipped":
+                    extra = rec["reason"][:80]
+                print(f"[{tag:7s}] {arch:24s} {shape:12s} {mesh_kind:6s} {extra}",
+                      flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

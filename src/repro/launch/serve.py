@@ -1,0 +1,79 @@
+"""Serving driver — batched prefill + greedy decode against the ring cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch zamba2-1.2b \
+        --reduced --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+import repro.sharding as sharding
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.models import init_params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh()
+    baxes = sharding.batch_axes(mesh)
+
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    max_len = args.prompt_len + args.gen
+
+    prefill_fn = jax.jit(make_prefill_step(cfg, mesh, baxes, max_len=max_len))
+    decode_fn = jax.jit(make_decode_step(cfg, mesh, baxes))
+
+    prompts = jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab_size
+    )
+    batch = {"tokens": prompts}
+    if cfg.family in ("vlm", "audio"):
+        batch["media"] = (
+            jax.random.normal(
+                key, (args.batch, cfg.n_media_tokens, cfg.d_model)
+            ) * 0.02
+        ).astype(jnp.dtype(cfg.dtype))
+
+    t0 = time.time()
+    next_tok, logits, cache = prefill_fn(params, batch)
+    next_tok.block_until_ready()
+    t1 = time.time()
+    out = [np.asarray(next_tok)]
+    tok = next_tok[:, None]
+    for _ in range(args.gen - 1):
+        tok_next, cache = decode_fn(params, tok, cache)
+        out.append(np.asarray(tok_next))
+        tok = tok_next[:, None]
+    jax.block_until_ready(tok)
+    t2 = time.time()
+
+    gen = np.stack(out, axis=1)
+    print(f"{cfg.name}: prefill {args.batch}x{args.prompt_len} in {t1-t0:.2f}s; "
+          f"decoded {args.gen} tokens in {t2-t1:.2f}s "
+          f"({args.batch*args.gen/(t2-t1):,.1f} tok/s)")
+    print("sample:", gen[0, :16].tolist())
+    assert gen.min() >= 0 and gen.max() < cfg.vocab_size
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""The assigned input shapes + abstract input builders for the dry-run.
+
+``input_specs`` returns weak-type-correct ShapeDtypeStruct stand-ins for
+every model input — no device allocation, shardable, exactly what
+``jax.jit(...).lower()`` needs. Decode shapes build the (abstract) KV /
+state cache for a ``seq_len`` context and feed ONE new token.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import cache as cache_mod
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def shape_skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> str | None:
+    """Documented skips (DESIGN.md): whisper has no 500k decoding horizon;
+    full-attention archs run long_500k only via their SWA opt-in."""
+    if shape.name == "long_500k":
+        if cfg.family == "audio":
+            return "enc-dec audio: 448-token decode horizon, no sub-quadratic variant"
+        sub_quadratic = (
+            cfg.family in ("hybrid", "ssm")
+            or cfg.sliding_window > 0
+            or cfg.long_context_window > 0
+        )
+        if not sub_quadratic:
+            return "pure full attention cannot serve 524288 tokens"
+    return None
+
+
+def batch_inputs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Abstract batch for train/prefill kinds."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    out = {"tokens": tok}
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        out["weights"] = jax.ShapeDtypeStruct((b,), jnp.float32)
+    if cfg.family in ("vlm", "audio"):
+        out["media"] = jax.ShapeDtypeStruct((b, cfg.n_media_tokens, cfg.d_model), dt)
+    return out
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeSpec) -> tuple[dict, dict]:
+    """(tokens, cache) abstract inputs for the decode kinds."""
+    b, s = shape.global_batch, shape.seq_len
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    cache = cache_mod.abstract_cache(cfg, b, s)
+    return {"tokens": tokens}, cache

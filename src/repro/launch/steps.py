@@ -1,0 +1,135 @@
+"""Step builders: the jit-able train / prefill / decode programs.
+
+``make_train_step`` builds the full production step — microbatched gradient
+accumulation (f32 accumulators), optional Bernoulli importance weights (the
+paper's sampled objective), optimizer update — as one pure function of
+(params, opt_state, batch, rng).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import decode_step, forward_train, prefill
+from repro.optim.optimizers import Optimizer, apply_updates
+
+PyTree = Any
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt: Optimizer,
+    mesh=None,
+    batch_axes: tuple[str, ...] = ("data",),
+    accum: int = 1,
+    sampling_rate: float = 0.0,   # > 0: draw Bernoulli weights per microbatch
+    grad_specs=None,              # PartitionSpec pytree for the f32 grad
+                                  # accumulator (pin to the param specs so
+                                  # per-microbatch grad sync lowers to
+                                  # reduce-scatter, not all-reduce — §Perf)
+) -> Callable:
+    """Returns train_step(params, opt_state, batch, rng) ->
+    (params, opt_state, metrics)."""
+
+    def loss_fn(params, mb):
+        return forward_train(params, cfg, mb, mesh, batch_axes)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    if mesh is not None and grad_specs is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        _gshard = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), grad_specs,
+            is_leaf=lambda x: isinstance(x, PartitionSpec),
+        )
+
+        def pin(g):
+            return jax.tree.map(jax.lax.with_sharding_constraint, g, _gshard)
+    else:
+        def pin(g):
+            return g
+
+    def add_weights(mb, rng):
+        if sampling_rate <= 0.0:
+            return mb
+        b = mb["tokens"].shape[0]
+        keep = jax.random.bernoulli(rng, sampling_rate, (b,))
+        # importance weights Q_i / R_i — unbiased for the unweighted mean
+        mb = dict(mb)
+        mb["weights"] = keep.astype(jnp.float32) / sampling_rate
+        return mb
+
+    def train_step(params, opt_state, batch, rng):
+        if accum == 1:
+            (loss, metrics), grads = grad_fn(params, add_weights(batch, rng))
+        else:
+            split = lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+            mbs = {k: split(v) for k, v in batch.items()}
+            rngs = jax.random.split(rng, accum)
+            g0 = pin(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            )
+
+            def body(carry, xs):
+                gacc, lacc, aacc = carry
+                mb, r = xs
+                (l, m), g = grad_fn(params, add_weights(mb, r))
+                gacc = pin(jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), gacc, g
+                ))
+                return (gacc, lacc + m["ce"], aacc + m["aux"]), None
+
+            (grads, ce, aux), _ = jax.lax.scan(
+                body, (g0, jnp.float32(0.0), jnp.float32(0.0)), (mbs, rngs)
+            )
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = ce / accum
+            metrics = {"ce": ce / accum, "aux": aux / accum}
+
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def make_prefill_step(
+    cfg: ModelConfig,
+    mesh=None,
+    batch_axes: tuple[str, ...] = ("data",),
+    max_len: int | None = None,
+) -> Callable:
+    """prefill_step(params, batch) -> (next_token (B,), logits, cache)."""
+
+    def prefill_step(params, batch):
+        logits, cache = prefill(
+            params, cfg, batch, mesh, batch_axes, max_len=max_len
+        )
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(
+    cfg: ModelConfig,
+    mesh=None,
+    batch_axes: tuple[str, ...] = ("data",),
+) -> Callable:
+    """serve_step(params, tokens (B,1), cache) -> (next_token (B,), cache').
+
+    The MoE body runs with batch_axes=() at decode time: replicating the
+    handful of decode tokens over 'data' (KBs) is far cheaper than
+    gathering the expert weights over 'data' (GBs) every token — see the
+    2D expert sharding note in ``moe_ffn``.
+    """
+
+    def serve_step(params, tokens, cache):
+        logits, cache = decode_step(params, cfg, tokens, cache, mesh, ())
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return serve_step

@@ -1,0 +1,30 @@
+"""Model zoo: the 10 assigned architectures as one composable decoder stack.
+
+Families: dense GQA (optionally sliding-window), MoE (expert-parallel
+shard_map dispatch), VLM (interleaved cross-attention), audio enc-dec
+(whisper), hybrid SSM (zamba2: Mamba2 + shared attention block), and
+xLSTM (mLSTM + sLSTM). All families share the same parameter-schema,
+layer-group-scan, KV-cache, and sharding machinery.
+"""
+from repro.models.config import ModelConfig
+from repro.models.transformer import (
+    init_params,
+    param_schema,
+    abstract_params,
+    forward_train,
+    prefill,
+    decode_step,
+)
+from repro.models.cache import init_cache, abstract_cache
+
+__all__ = [
+    "ModelConfig",
+    "init_params",
+    "param_schema",
+    "abstract_params",
+    "forward_train",
+    "prefill",
+    "decode_step",
+    "init_cache",
+    "abstract_cache",
+]

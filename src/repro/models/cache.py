@@ -1,0 +1,112 @@
+"""Decode caches for every family, as plain pytrees of arrays.
+
+Shared conventions:
+  * Attention caches are ring buffers of ``capacity`` slots; ``slot_pos``
+    stores each slot's absolute position (-1 = empty). capacity = full
+    context for full attention, window for SWA — decided by
+    ``ModelConfig.window_for(seq_len)``.
+  * ``pos`` is the absolute position of the *next* token.
+  * Stacked leading axes mirror the layer-scan structure so lax.scan can
+    thread cache slices alongside parameter slices.
+
+``cache_structure`` is abstract-first: it returns ShapeDtypeStructs (a
+32k-context production cache is hundreds of GB — it must never materialize
+on the host; the dry-run only lowers against it). ``init_cache`` maps
+``jnp.zeros`` over the structure for real (small) serving runs.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+Cache = dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(int(d) for d in shape), dtype)
+
+
+def _attn_cache(cfg, n_stack, batch, cap, dt):
+    shape_kv = (n_stack, batch, cap, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": _sds(shape_kv, dt),
+        "v": _sds(shape_kv, dt),
+        "slot_pos": _sds((n_stack, cap), jnp.int32),
+    }
+
+
+def cache_structure(cfg: ModelConfig, batch: int, seq_len: int) -> Cache:
+    """Abstract cache blueprint (ShapeDtypeStruct leaves, no allocation)."""
+    dt = _dtype(cfg)
+    cap = cfg.window_for(seq_len)
+    c: Cache = {"pos": _sds((), jnp.int32)}
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        c["self"] = _attn_cache(cfg, cfg.n_layers, batch, cap, dt)
+    elif fam == "vlm":
+        g = cfg.n_layers // cfg.cross_attn_every
+        spg = cfg.cross_attn_every - 1
+        c["self"] = _attn_cache(cfg, g * spg, batch, cap, dt)
+        m = cfg.n_media_tokens
+        c["media_k"] = _sds((g, batch, m, cfg.n_kv_heads, cfg.head_dim), dt)
+        c["media_v"] = _sds((g, batch, m, cfg.n_kv_heads, cfg.head_dim), dt)
+    elif fam == "audio":
+        c["self"] = _attn_cache(cfg, cfg.n_layers, batch, cap, dt)
+        m = cfg.n_media_tokens
+        kv = (cfg.n_layers, batch, m, cfg.n_kv_heads, cfg.head_dim)
+        c["media_k"] = _sds(kv, dt)
+        c["media_v"] = _sds(kv, dt)
+    elif fam == "hybrid":
+        n_shared = cfg.n_layers // cfg.shared_attn_every
+        conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+        c["ssm"] = _sds(
+            (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            dt,
+        )
+        c["conv"] = _sds((cfg.n_layers, batch, 3, conv_ch), dt)
+        c["shared"] = _attn_cache(cfg, n_shared, batch, cap, dt)
+    elif fam == "ssm":  # xlstm
+        ng = cfg.n_layers // cfg.slstm_every
+        mpg = cfg.slstm_every - 1
+        h, hd = cfg.n_heads, cfg.head_dim
+        c["mlstm"] = {
+            "c": _sds((ng, mpg, batch, h, hd, hd), dt),
+            "n": _sds((ng, mpg, batch, h, hd), dt),
+            "m": _sds((ng, mpg, batch, h), jnp.float32),
+        }
+        c["slstm"] = {
+            "c": _sds((ng, batch, h, hd), dt),
+            "n": _sds((ng, batch, h, hd), dt),
+            "m": _sds((ng, batch, h, hd), jnp.float32),
+            "h": _sds((ng, batch, h, hd), dt),
+        }
+    else:
+        raise ValueError(fam)
+    return c
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq_len: int) -> Cache:
+    return cache_structure(cfg, batch, seq_len)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> Cache:
+    """Concrete zero-initialized cache (small/serving use only)."""
+    def make(s: jax.ShapeDtypeStruct):
+        if s.dtype == jnp.int32 and len(s.shape) <= 2 and s.shape and s.shape[-1] > 0:
+            # slot_pos rings start empty (-1); 'pos' starts at 0.
+            return jnp.full(s.shape, -1, jnp.int32)
+        if s.dtype == jnp.int32:
+            return jnp.zeros(s.shape, jnp.int32)
+        return jnp.zeros(s.shape, s.dtype)
+
+    out = jax.tree.map(make, cache_structure(cfg, batch, seq_len))
+    out["pos"] = jnp.zeros((), jnp.int32)
+    return out

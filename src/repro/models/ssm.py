@@ -1,0 +1,151 @@
+"""Mamba2 (SSD) block — chunked training scan + O(1) decode step.
+
+The selective state space recurrence per head (state n, head dim p):
+
+    h_t = exp(A * dt_t) * h_{t-1} + dt_t * B_t (x)  (outer product p x n)
+    y_t = C_t . h_t + D * x_t
+
+Training uses the SSD chunked algorithm: within a chunk the contribution is
+an attention-like (c x c) quadratic form with decay mask; across chunks a
+short lax.scan carries the (B, H, p, n) state. Memory is bounded by one
+chunk's score tensor — the SSM analogue of q-chunked attention.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+Params = dict[str, Any]
+
+
+def _split_proj(p: Params, x: jax.Array, cfg: ModelConfig):
+    """in_proj -> z (gate), xin, B, C, dt."""
+    di, st, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :di]
+    xin = zxbcdt[..., di : 2 * di]
+    bmat = zxbcdt[..., 2 * di : 2 * di + st]
+    cmat = zxbcdt[..., 2 * di + st : 2 * di + 2 * st]
+    dt = zxbcdt[..., 2 * di + 2 * st :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    return z, xin, bmat, cmat, dt  # dt: (B, S, nh) f32
+
+
+def _conv_train(p: Params, u: jax.Array) -> jax.Array:
+    """Depthwise causal conv, kernel 4, over (B, S, C)."""
+    kw = p["conv_w"]  # (4, C)
+    pad = jnp.pad(u, ((0, 0), (kw.shape[0] - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + u.shape[1], :] * kw[i][None, None, :]
+        for i in range(kw.shape[0])
+    )
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def mamba2_train(
+    p: Params, x: jax.Array, cfg: ModelConfig, return_state: bool = False
+):
+    """Full-sequence SSD. x: (B, S, D) -> (B, S, D).
+
+    With ``return_state`` also returns (ssm_state, conv_state) for decoding.
+    """
+    b, s, d = x.shape
+    nh, hp, st = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    c = min(cfg.ssm_chunk, s)
+    assert s % c == 0, "seq must divide ssm_chunk"
+    nc = s // c
+
+    z, xin, bmat, cmat, dt = _split_proj(p, x, cfg)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv_state = conv_in[:, -3:, :]
+    conv_out = _conv_train(p, conv_in)
+    xin = conv_out[..., : cfg.d_inner]
+    bmat = conv_out[..., cfg.d_inner : cfg.d_inner + st]
+    cmat = conv_out[..., cfg.d_inner + st :]
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))          # (nh,)
+    la = dt * a[None, None, :]                            # log decay (B, S, nh)
+    xh = xin.reshape(b, s, nh, hp)
+    xdt = xh * dt[..., None].astype(xh.dtype)             # dt-weighted input
+
+    # chunk views, scanned one chunk at a time so peak memory is one chunk's
+    # (B, c, c, nh) decay tensor — never (B, nc, c, c, nh).
+    cum = jnp.cumsum(la.reshape(b, nc, c, nh), axis=2)     # (B, nc, c, nh)
+    xc = xdt.reshape(b, nc, c, nh, hp).transpose(1, 0, 2, 3, 4)
+    bc = bmat.reshape(b, nc, c, st).transpose(1, 0, 2, 3)
+    cc = cmat.reshape(b, nc, c, st).transpose(1, 0, 2, 3)
+    cumt = cum.transpose(1, 0, 2, 3)                       # (nc, B, c, nh)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+
+    def chunk_step(h, inp):
+        cc_, bc_, xc_, cum_ = inp                          # per-chunk views
+        # Within-chunk: y_intra[i] = sum_{j<=i} (C_i.B_j) e^{cum_i - cum_j} xdt_j
+        gmat = jnp.einsum("bis,bjs->bij", cc_, bc_)        # (B, c, c)
+        ldiff = cum_[:, :, None, :] - cum_[:, None, :, :]  # (B, c, c, nh)
+        decay = jnp.where(tri[None, :, :, None], jnp.exp(ldiff), 0.0)
+        m = gmat[..., None] * decay.astype(gmat.dtype)     # (B, c, c, nh)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", m.astype(xc_.dtype), xc_)
+        # Inter-chunk: y_inter[i] = e^{cum_i} * C_i . h_prev
+        y_inter = jnp.einsum(
+            "bis,bhps,bih->bihp", cc_, h, jnp.exp(cum_).astype(cc_.dtype)
+        )
+        # State update: h' = e^{cum_last} h + sum_j e^{cum_last - cum_j} B_j (x) xdt_j
+        w = jnp.exp(cum_[:, -1:, :] - cum_)                # (B, c, nh)
+        s_chunk = jnp.einsum("bcs,bch,bchp->bhps", bc_, w.astype(bc_.dtype), xc_)
+        a_tot = jnp.exp(cum_[:, -1, :]).astype(h.dtype)    # (B, nh)
+        h = h * a_tot[..., None, None] + s_chunk
+        return h, y_intra + y_inter                        # (B, c, nh, hp)
+
+    h0 = jnp.zeros((b, nh, hp, st), xh.dtype)
+    h_final, ys = jax.lax.scan(chunk_step, h0, (cc, bc, xc, cumt))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, nh, hp)
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, cfg.d_inner)
+    y = _gated_norm(y, z, p["norm"])
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, h_final, conv_state
+    return out
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array) -> jax.Array:
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (y * jax.lax.rsqrt(var + 1e-6).astype(y.dtype)) * scale
+
+
+def mamba2_decode(
+    p: Params,
+    x: jax.Array,          # (B, 1, D)
+    ssm_state: jax.Array,  # (B, nh, p, st)
+    conv_state: jax.Array, # (B, K-1, conv_channels)
+    cfg: ModelConfig,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One token; returns (y, ssm_state', conv_state')."""
+    b = x.shape[0]
+    nh, hp, st = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, xin, bmat, cmat, dt = _split_proj(p, x, cfg)
+    u = jnp.concatenate([xin, bmat, cmat], axis=-1)[:, 0]  # (B, C)
+    kw, kb = p["conv_w"], p["conv_b"]
+    full = jnp.concatenate([conv_state, u[:, None, :]], axis=1)  # (B, K, C)
+    conv = jax.nn.silu(jnp.einsum("bkc,kc->bc", full, kw) + kb)
+    conv_state = full[:, 1:]
+    xin = conv[:, : cfg.d_inner]
+    bmat = conv[:, cfg.d_inner : cfg.d_inner + st]
+    cmat = conv[:, cfg.d_inner + st :]
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dt0 = dt[:, 0]                                          # (B, nh)
+    decay = jnp.exp(dt0 * a[None, :]).astype(x.dtype)       # (B, nh)
+    xh = xin.reshape(b, nh, hp) * dt0[..., None].astype(x.dtype)
+    upd = jnp.einsum("bhp,bs->bhps", xh, bmat)
+    ssm_state = ssm_state * decay[..., None, None] + upd
+    y = jnp.einsum("bhps,bs->bhp", ssm_state, cmat)
+    y = y + xin.reshape(b, nh, hp) * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, cfg.d_inner)
+    y = _gated_norm(y, z, p["norm"])
+    return y @ p["out_proj"], ssm_state, conv_state

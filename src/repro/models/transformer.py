@@ -1,0 +1,781 @@
+"""Model assembly: parameter schema, init, train forward, prefill, decode.
+
+One declarative *parameter schema* per family is the single source of truth:
+``param_schema(cfg)`` returns a nested dict of Entry(shape, logical_axes,
+init); ``init_params`` / ``abstract_params`` / the sharding policy all map
+over it, so parameters, ShapeDtypeStructs and PartitionSpecs can never drift
+apart.
+
+Layer stacks are scanned (``lax.scan`` over stacked parameter pytrees) with
+optional remat — 100-layer models compile as one loop. Families with
+interleaved block types scan over *groups*:
+
+  vlm:    20 groups of [4 self layers + 1 gated cross-attn layer]
+  hybrid: 6 groups of [6 mamba2 layers + shared attn block] + 2 tail mamba
+  ssm:    6 groups of [7 mLSTM + 1 sLSTM]
+  audio:  encoder scan + decoder scan (self + cross + mlp per layer)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import xlstm as X
+from repro.models.config import ModelConfig
+
+Params = dict[str, Any]
+
+
+class Entry(NamedTuple):
+    shape: tuple
+    axes: tuple          # logical axis names, same length as shape
+    init: str = "normal"  # normal | zeros | ones | alog | dtbias
+
+
+# ------------------------------------------------------------------ schemas
+def _attn_schema(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "wq": Entry((d, cfg.q_dim), ("embed", "q_flat")),
+        "wk": Entry((d, cfg.kv_dim), ("embed", "kv_flat")),
+        "wv": Entry((d, cfg.kv_dim), ("embed", "kv_flat")),
+        "wo": Entry((cfg.q_dim, d), ("q_flat", "embed")),
+    }
+
+
+def _mlp_schema(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "wg": Entry((d, f), ("embed", "ff")),
+        "wu": Entry((d, f), ("embed", "ff")),
+        "wd": Entry((f, d), ("ff", "embed")),
+    }
+
+
+def _moe_schema(cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "wr": Entry((d, e), ("embed", None)),
+        "wg": Entry((e, d, f), ("experts", "embed", "ff")),
+        "wu": Entry((e, d, f), ("experts", "embed", "ff")),
+        "wd": Entry((e, f, d), ("experts", "ff", "embed")),
+    }
+
+
+def _mamba_schema(cfg: ModelConfig) -> dict:
+    d, di, st, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    proj = 2 * di + 2 * st + nh
+    conv_ch = di + 2 * st
+    return {
+        "in_proj": Entry((d, proj), ("embed", "inner_proj")),
+        "conv_w": Entry((4, conv_ch), (None, "conv_ch")),
+        "conv_b": Entry((conv_ch,), ("conv_ch",), "zeros"),
+        "dt_bias": Entry((nh,), (None,), "dtbias"),
+        "a_log": Entry((nh,), (None,), "alog"),
+        "d_skip": Entry((nh,), (None,), "ones"),
+        "norm": Entry((di,), ("inner",), "ones"),
+        "out_proj": Entry((di, d), ("inner", "embed")),
+        "ln": Entry((d,), ("embed",), "ones"),
+    }
+
+
+def _mlstm_schema(cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    return {
+        "wq": Entry((d, d), ("embed", "q_flat")),
+        "wk": Entry((d, d), ("embed", "q_flat")),
+        "wv": Entry((d, d), ("embed", "q_flat")),
+        "w_if": Entry((d, 2 * h), ("embed", None)),
+        "b_if": Entry((2 * h,), (None,), "zeros"),
+        "wo_gate": Entry((d, d), ("embed", "q_flat")),
+        "wo": Entry((d, d), ("q_flat", "embed")),
+        "ln": Entry((d,), ("embed",), "ones"),
+    }
+
+
+def _slstm_schema(cfg: ModelConfig) -> dict:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return {
+        "w_gates": Entry((d, 4 * d), ("embed", "gates")),
+        "b_gates": Entry((4 * d,), ("gates",), "zeros"),
+        "r_gates": Entry((h, 4, hd, hd), (None, None, None, "head_dim")),
+        "wo": Entry((d, d), ("q_flat", "embed")),
+        "ln": Entry((d,), ("embed",), "ones"),
+    }
+
+
+def _dense_layer(cfg) -> dict:
+    return {
+        "attn": _attn_schema(cfg),
+        "mlp": _mlp_schema(cfg),
+        "ln1": Entry((cfg.d_model,), ("embed",), "ones"),
+        "ln2": Entry((cfg.d_model,), ("embed",), "ones"),
+    }
+
+
+def _moe_layer(cfg) -> dict:
+    return {
+        "attn": _attn_schema(cfg),
+        "moe": _moe_schema(cfg),
+        "ln1": Entry((cfg.d_model,), ("embed",), "ones"),
+        "ln2": Entry((cfg.d_model,), ("embed",), "ones"),
+    }
+
+
+def _cross_layer(cfg) -> dict:
+    return {
+        "xattn": _attn_schema(cfg),
+        "mlp": _mlp_schema(cfg),
+        "ln1": Entry((cfg.d_model,), ("embed",), "ones"),
+        "ln2": Entry((cfg.d_model,), ("embed",), "ones"),
+        "gate_attn": Entry((), (), "zeros"),
+        "gate_mlp": Entry((), (), "zeros"),
+    }
+
+
+def _decoder_layer(cfg) -> dict:  # audio decoder: self + cross + mlp
+    return {
+        "attn": _attn_schema(cfg),
+        "xattn": _attn_schema(cfg),
+        "mlp": _mlp_schema(cfg),
+        "ln1": Entry((cfg.d_model,), ("embed",), "ones"),
+        "lnx": Entry((cfg.d_model,), ("embed",), "ones"),
+        "ln2": Entry((cfg.d_model,), ("embed",), "ones"),
+    }
+
+
+def _stack(schema: dict, n: int) -> dict:
+    out = {}
+    for k, v in schema.items():
+        if isinstance(v, dict):
+            out[k] = _stack(v, n)
+        else:
+            out[k] = Entry((n,) + v.shape, ("layers",) + v.axes, v.init)
+    return out
+
+
+def param_schema(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.padded_vocab
+    schema: dict = {
+        "embed": Entry((v, d), ("vocab", "embed")),
+        "lm_head": Entry((d, v), ("embed", "vocab")),
+        "final_norm": Entry((d,), ("embed",), "ones"),
+    }
+    fam = cfg.family
+    if fam == "dense":
+        schema["layers"] = _stack(_dense_layer(cfg), cfg.n_layers)
+    elif fam == "moe":
+        schema["layers"] = _stack(_moe_layer(cfg), cfg.n_layers)
+    elif fam == "vlm":
+        g = cfg.n_layers // cfg.cross_attn_every
+        spg = cfg.cross_attn_every - 1
+        schema["groups"] = {
+            "self": _stack(_stack(_dense_layer(cfg), spg), g),
+            "cross": _stack(_cross_layer(cfg), g),
+        }
+    elif fam == "audio":
+        schema["encoder"] = _stack(_dense_layer(cfg), cfg.encoder_layers)
+        schema["decoder"] = _stack(_decoder_layer(cfg), cfg.n_layers)
+        schema["enc_ln"] = Entry((d,), ("embed",), "ones")
+    elif fam == "hybrid":
+        g = cfg.n_layers // cfg.shared_attn_every
+        tail = cfg.n_layers - g * cfg.shared_attn_every
+        schema["groups"] = {
+            "mamba": _stack(_stack(_mamba_schema(cfg), cfg.shared_attn_every), g),
+        }
+        if tail:
+            schema["tail"] = _stack(_mamba_schema(cfg), tail)
+        schema["shared"] = _dense_layer(cfg)
+    elif fam == "ssm":
+        g = cfg.n_layers // cfg.slstm_every
+        mpg = cfg.slstm_every - 1
+        schema["groups"] = {
+            "mlstm": _stack(_stack(_mlstm_schema(cfg), mpg), g),
+            "slstm": _stack(_slstm_schema(cfg), g),
+        }
+    else:
+        raise ValueError(fam)
+    return schema
+
+
+# --------------------------------------------------------------------- init
+def _is_entry(x) -> bool:
+    return isinstance(x, Entry)
+
+
+def _map_schema(fn, schema: dict, path=()):
+    out = {}
+    for k, v in schema.items():
+        if _is_entry(v):
+            out[k] = fn(path + (k,), v)
+        else:
+            out[k] = _map_schema(fn, v, path + (k,))
+    return out
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    schema = param_schema(cfg)
+    flat: list[tuple] = []
+    _map_schema(lambda p, e: flat.append((p, e)), schema)
+    keys = jax.random.split(key, len(flat))
+    kmap = {p: k for (p, _), k in zip(flat, keys)}
+
+    def make(path, e: Entry):
+        if e.init == "zeros":
+            return jnp.zeros(e.shape, dt)
+        if e.init == "ones":
+            return jnp.ones(e.shape, dt)
+        if e.init == "alog":
+            n = e.shape[-1]
+            base = jnp.log(1.0 + jnp.arange(n, dtype=jnp.float32) % 15)
+            return jnp.broadcast_to(base + 0.5, e.shape).astype(jnp.float32)
+        if e.init == "dtbias":
+            return jnp.full(e.shape, -4.0, jnp.float32)
+        fan_in = e.shape[-2] if len(e.shape) >= 2 else e.shape[-1]
+        scale = 1.0 / jnp.sqrt(jnp.maximum(fan_in, 1)).astype(jnp.float32)
+        return (jax.random.normal(kmap[path], e.shape, jnp.float32) * scale).astype(dt)
+
+    return _map_schema(make, schema)
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+
+    def make(path, e: Entry):
+        if e.init in ("alog", "dtbias"):
+            return jax.ShapeDtypeStruct(e.shape, jnp.float32)
+        return jax.ShapeDtypeStruct(e.shape, dt)
+
+    return _map_schema(make, param_schema(cfg))
+
+
+# ----------------------------------------------------------- train forwards
+def _dense_block(p, x, cfg, window, segments=None):
+    x = x + L.self_attention_train(
+        p["attn"], L.rms_norm(x, p["ln1"]), cfg, window, segments=segments
+    )
+    x = x + L.mlp(p["mlp"], L.rms_norm(x, p["ln2"]))
+    return x
+
+
+def _moe_block(p, x, cfg, window, mesh, batch_axes, segments=None):
+    x = x + L.self_attention_train(
+        p["attn"], L.rms_norm(x, p["ln1"]), cfg, window, segments=segments
+    )
+    out, aux = L.moe_ffn(
+        p["moe"], L.rms_norm(x, p["ln2"]), cfg, mesh, batch_axes
+    )
+    return x + out, aux
+
+
+def _cross_block(p, x, media, cfg):
+    g1 = jnp.tanh(p["gate_attn"].astype(jnp.float32)).astype(x.dtype)
+    g2 = jnp.tanh(p["gate_mlp"].astype(jnp.float32)).astype(x.dtype)
+    x = x + g1 * L.cross_attention(p["xattn"], L.rms_norm(x, p["ln1"]), media, cfg)
+    x = x + g2 * L.mlp(p["mlp"], L.rms_norm(x, p["ln2"]))
+    return x
+
+
+def _mamba_block(p, x, cfg):
+    return x + S.mamba2_train(p, L.rms_norm(x, p["ln"]), cfg)
+
+
+def _scan(fn, stacked, x, remat=True, aux0=None, policy: str = "full"):
+    """Scan ``fn(p_slice, x) -> x'`` or ``-> (x', aux)`` over a stacked tree."""
+    if remat:
+        kw = {}
+        if policy == "dots":
+            kw["policy"] = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        f = jax.checkpoint(fn, **kw)
+    else:
+        f = fn
+
+    def body(carry, p):
+        x, aux = carry
+        out = f(p, x)
+        if isinstance(out, tuple):
+            x, a = out
+            aux = aux + a
+        else:
+            x = out
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0) if aux0 is None else aux0), stacked)
+    return x, aux
+
+
+def _constrainer(mesh, batch_axes: tuple):
+    """Pin hidden-state sharding at layer boundaries: batch over the data
+    axes, model dims replicated (megatron activation convention). Without
+    the pin XLA sometimes trades the batch sharding away mid-backbone,
+    replicating whole score tensors per device."""
+    if mesh is None or not batch_axes:
+        return lambda h: h
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    sh = NamedSharding(mesh, P(tuple(batch_axes), None, None))
+    return lambda h: jax.lax.with_sharding_constraint(h, sh)
+
+
+def backbone_train(
+    params: Params,
+    cfg: ModelConfig,
+    x: jax.Array,                  # (B, S, D) embedded tokens
+    media: jax.Array | None,
+    mesh=None,
+    batch_axes: tuple = ("data",),
+    segments: jax.Array | None = None,   # (B, S) packing ids (dense/moe)
+) -> tuple[jax.Array, jax.Array]:
+    """Hidden states + moe aux loss for the full (teacher-forced) sequence."""
+    s = x.shape[1]
+    window = cfg.window_for(s)
+    fam = cfg.family
+    cs = _constrainer(mesh, batch_axes)
+
+    if fam == "dense":
+        x, aux = _scan(
+            lambda p, h: cs(_dense_block(p, h, cfg, window, segments)),
+            params["layers"], x, cfg.remat, policy=cfg.remat_policy,
+        )
+    elif fam == "moe":
+        def blk(p, h):
+            h, a = _moe_block(p, h, cfg, window, mesh, batch_axes, segments)
+            return cs(h), a
+        x, aux = _scan(blk, params["layers"], x, cfg.remat,
+                       policy=cfg.remat_policy)
+    elif fam == "vlm":
+        def group(p, h):
+            h, _ = _scan(lambda q, u: cs(_dense_block(q, u, cfg, window)),
+                         p["self"], h, remat=False)
+            return cs(_cross_block(p["cross"], h, media, cfg))
+        x, aux = _scan(group, params["groups"], x, remat=cfg.remat)
+    elif fam == "audio":
+        enc, _ = _scan(
+            lambda p, h: _enc_block(p, h, cfg), params["encoder"], media, cfg.remat
+        )
+        enc = L.rms_norm(enc, params["enc_ln"])
+        def dec(p, h):
+            h = h + L.self_attention_train(
+                p["attn"], L.rms_norm(h, p["ln1"]), cfg, window
+            )
+            h = h + L.cross_attention(p["xattn"], L.rms_norm(h, p["lnx"]), enc, cfg)
+            h = h + L.mlp(p["mlp"], L.rms_norm(h, p["ln2"]))
+            return cs(h)
+        x, aux = _scan(dec, params["decoder"], x, cfg.remat)
+    elif fam == "hybrid":
+        def group(p, h):
+            h, _ = _scan(lambda q, u: cs(_mamba_block(q, u, cfg)),
+                         p["mamba"], h, remat=False)
+            return cs(_dense_block(params["shared"], h, cfg, window))
+        x, aux = _scan(group, params["groups"], x, remat=cfg.remat)
+        if "tail" in params:
+            x, _ = _scan(lambda q, u: cs(_mamba_block(q, u, cfg)),
+                         params["tail"], x, cfg.remat)
+    elif fam == "ssm":
+        def group(p, h):
+            def mblock(q, u):
+                return cs(u + X.mlstm_train(q, L.rms_norm(u, q["ln"]), cfg))
+            h, _ = _scan(mblock, p["mlstm"], h, remat=False)
+            return cs(
+                h + X.slstm_train(p["slstm"], L.rms_norm(h, p["slstm"]["ln"]), cfg)
+            )
+        x, aux = _scan(group, params["groups"], x, remat=cfg.remat)
+    else:
+        raise ValueError(fam)
+    return x, aux
+
+
+def _enc_block(p, x, cfg):
+    x = x + L.encoder_attention(p["attn"], L.rms_norm(x, p["ln1"]), cfg)
+    x = x + L.mlp(p["mlp"], L.rms_norm(x, p["ln2"]))
+    return x
+
+
+def forward_train(
+    params: Params,
+    cfg: ModelConfig,
+    batch: dict,
+    mesh=None,
+    batch_axes: tuple = ("data",),
+) -> tuple[jax.Array, dict]:
+    """Teacher-forced LM loss. batch: tokens (B,S), labels (B,S),
+    [media (B,M,D)], [segments (B,S) — packed-document ids, dense/moe only],
+    [weights (B,) — Bernoulli importance weights m'_i / R, the paper's
+    sampled objective lifted to sequence level]. Returns (loss, metrics)."""
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    media = batch.get("media")
+    segments = batch.get("segments")
+    if segments is not None and cfg.family not in ("dense", "moe"):
+        raise ValueError(
+            "packed segments need attention masking; recurrent families "
+            "would need per-segment state resets (not implemented)"
+        )
+    x, aux = backbone_train(
+        params, cfg, x, media, mesh, batch_axes, segments=segments
+    )
+    x = L.rms_norm(x, params["final_norm"])
+    logits = x @ params["lm_head"]                        # (B, S, Vpad)
+    mask_pad = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+    logits = jnp.where(mask_pad[None, None, :], logits, -1e9)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["labels"][..., None], axis=-1)[..., 0]
+    per_seq = jnp.mean(logz - gold, axis=-1)              # (B,)
+    w = batch.get("weights")
+    if w is None:
+        ce = jnp.mean(per_seq)
+    else:
+        ce = jnp.sum(w * per_seq) / jnp.maximum(jnp.sum(w), 1e-6)
+    loss = ce + cfg.router_aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ------------------------------------------------------------ serving paths
+def _logits(params, cfg, x):
+    """(B, S, D) hidden -> (B, S, Vpad) masked logits."""
+    x = L.rms_norm(x, params["final_norm"])
+    logits = x @ params["lm_head"]
+    mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+    return jnp.where(mask[None, None, :], logits, jnp.asarray(-1e9, logits.dtype))
+
+
+def _ring_from_kv(ks: jax.Array, vs: jax.Array, cap: int) -> dict:
+    """Stacked full-sequence K/V (L, B, S, KV, hd) -> ring cache of ``cap``
+    slots per layer (slot of position p = p % cap).
+
+    cap >= S: positions 0..S-1 land in slots 0..S-1, the rest stay empty —
+    the full-attention case with decode headroom. cap < S (sliding window):
+    the last ``cap`` positions are kept; requires cap | S so the ring
+    alignment (slot = pos % cap) holds.
+    """
+    s = ks.shape[2]
+    nl = ks.shape[0]
+    if cap >= s:
+        pad = [(0, 0), (0, 0), (0, cap - s), (0, 0), (0, 0)]
+        idx = jnp.arange(cap, dtype=jnp.int32)
+        slot = jnp.where(idx < s, idx, -1)
+        return {
+            "k": jnp.pad(ks, pad),
+            "v": jnp.pad(vs, pad),
+            "slot_pos": jnp.broadcast_to(slot, (nl, cap)),
+        }
+    assert s % cap == 0, "ring capacity must divide prefill length"
+    slot = jnp.arange(cap, dtype=jnp.int32) + (s - cap)
+    return {
+        "k": ks[:, :, s - cap :],
+        "v": vs[:, :, s - cap :],
+        "slot_pos": jnp.broadcast_to(slot, (nl, cap)),
+    }
+
+
+def _media_kv(p_attn, media, cfg):
+    b, m, _ = media.shape
+    k = (media @ p_attn["wk"]).reshape(b, m, cfg.n_kv_heads, cfg.head_dim)
+    v = (media @ p_attn["wv"]).reshape(b, m, cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def prefill(
+    params: Params,
+    cfg: ModelConfig,
+    batch: dict,
+    mesh=None,
+    batch_axes: tuple = ("data",),
+    max_len: int | None = None,
+) -> tuple[jax.Array, dict]:
+    """Score the prompt and build the decode cache.
+
+    batch: tokens (B, S), [media (B, M, D)]. ``max_len`` is the total
+    context budget (prompt + decode headroom); the attention-cache capacity
+    is ``cfg.window_for(max_len)``. Returns (last-position logits (B, Vpad),
+    cache) — the cache layout matches ``repro.models.cache``.
+    """
+    tokens = batch["tokens"]
+    media = batch.get("media")
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    cap = cfg.window_for(max_len if max_len is not None else s)
+    window = cfg.window_for(s)
+    fam = cfg.family
+    cache: dict = {"pos": jnp.asarray(s, jnp.int32)}
+
+    def maybe_ckpt(f):
+        return jax.checkpoint(f) if cfg.remat else f
+
+    if fam in ("dense", "moe"):
+        def body(h, p):
+            a, (k, v) = L.self_attention_train(
+                p["attn"], L.rms_norm(h, p["ln1"]), cfg, window, return_kv=True
+            )
+            h = h + a
+            if fam == "moe":
+                out, _ = L.moe_ffn(
+                    p["moe"], L.rms_norm(h, p["ln2"]), cfg, mesh, batch_axes
+                )
+                h = h + out
+            else:
+                h = h + L.mlp(p["mlp"], L.rms_norm(h, p["ln2"]))
+            return h, (k, v)
+
+        x, (ks, vs) = jax.lax.scan(maybe_ckpt(body), x, params["layers"])
+        cache["self"] = _ring_from_kv(ks, vs, cap)
+
+    elif fam == "vlm":
+        def group(h, p):
+            def self_body(u, q):
+                a, (k, v) = L.self_attention_train(
+                    q["attn"], L.rms_norm(u, q["ln1"]), cfg, window, return_kv=True
+                )
+                u = u + a
+                u = u + L.mlp(q["mlp"], L.rms_norm(u, q["ln2"]))
+                return u, (k, v)
+
+            h, (ks, vs) = jax.lax.scan(maybe_ckpt(self_body), h, p["self"])
+            mk, mv = _media_kv(p["cross"]["xattn"], media, cfg)
+            h = _cross_block(p["cross"], h, (mk, mv), cfg)
+            return h, (ks, vs, mk, mv)
+
+        x, (ks, vs, mks, mvs) = jax.lax.scan(group, x, params["groups"])
+        g, spg = ks.shape[0], ks.shape[1]
+        cache["self"] = _ring_from_kv(
+            ks.reshape((g * spg,) + ks.shape[2:]),
+            vs.reshape((g * spg,) + vs.shape[2:]),
+            cap,
+        )
+        cache["media_k"], cache["media_v"] = mks, mvs
+
+    elif fam == "audio":
+        enc, _ = _scan(
+            lambda p, h: _enc_block(p, h, cfg), params["encoder"], media, cfg.remat
+        )
+        enc = L.rms_norm(enc, params["enc_ln"])
+
+        def dec(h, p):
+            a, (k, v) = L.self_attention_train(
+                p["attn"], L.rms_norm(h, p["ln1"]), cfg, window, return_kv=True
+            )
+            h = h + a
+            mk, mv = _media_kv(p["xattn"], enc, cfg)
+            h = h + L.cross_attention(
+                p["xattn"], L.rms_norm(h, p["lnx"]), (mk, mv), cfg
+            )
+            h = h + L.mlp(p["mlp"], L.rms_norm(h, p["ln2"]))
+            return h, (k, v, mk, mv)
+
+        x, (ks, vs, mks, mvs) = jax.lax.scan(maybe_ckpt(dec), x, params["decoder"])
+        cache["self"] = _ring_from_kv(ks, vs, cap)
+        cache["media_k"], cache["media_v"] = mks, mvs
+
+    elif fam == "hybrid":
+        def group(h, p_mamba):
+            def mb(u, q):
+                out, hfin, cst = S.mamba2_train(
+                    q, L.rms_norm(u, q["ln"]), cfg, return_state=True
+                )
+                return u + out, (hfin, cst)
+
+            h, (hs, cs) = jax.lax.scan(maybe_ckpt(mb), h, p_mamba)
+            ps = params["shared"]
+            a, (k, v) = L.self_attention_train(
+                ps["attn"], L.rms_norm(h, ps["ln1"]), cfg, window, return_kv=True
+            )
+            h = h + a
+            h = h + L.mlp(ps["mlp"], L.rms_norm(h, ps["ln2"]))
+            return h, (hs, cs, k, v)
+
+        x, (hs, cs, ks, vs) = jax.lax.scan(group, x, params["groups"]["mamba"])
+        ssm = hs.reshape((-1,) + hs.shape[2:])   # (g*every, B, nh, hp, st)
+        conv = cs.reshape((-1,) + cs.shape[2:])
+        if "tail" in params:
+            def mb(u, q):
+                out, hfin, cst = S.mamba2_train(
+                    q, L.rms_norm(u, q["ln"]), cfg, return_state=True
+                )
+                return u + out, (hfin, cst)
+            x, (ht, ct) = jax.lax.scan(maybe_ckpt(mb), x, params["tail"])
+            ssm = jnp.concatenate([ssm, ht], axis=0)
+            conv = jnp.concatenate([conv, ct], axis=0)
+        cache["ssm"], cache["conv"] = ssm, conv
+        cache["shared"] = _ring_from_kv(ks, vs, cap)
+
+    elif fam == "ssm":
+        def group(h, p):
+            def mb(u, q):
+                out, (cm, nv, m) = X.mlstm_train(
+                    q, L.rms_norm(u, q["ln"]), cfg, return_state=True
+                )
+                return u + out, (cm, nv, m)
+
+            h, (cms, nvs, ms) = jax.lax.scan(maybe_ckpt(mb), h, p["mlstm"])
+            out, (sc, sn, sm, sh) = X.slstm_train(
+                p["slstm"], L.rms_norm(h, p["slstm"]["ln"]), cfg, return_state=True
+            )
+            return h + out, (cms, nvs, ms, sc, sn, sm, sh)
+
+        x, (cms, nvs, ms, sc, sn, sm, sh) = jax.lax.scan(group, x, params["groups"])
+        cache["mlstm"] = {"c": cms, "n": nvs, "m": ms}
+        cache["slstm"] = {"c": sc, "n": sn, "m": sm, "h": sh}
+    else:
+        raise ValueError(fam)
+
+    return _logits(params, cfg, x[:, -1:, :])[:, 0], cache
+
+
+def decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,        # (B, 1) int32 — the newest token
+    cache: dict,
+    mesh=None,
+    batch_axes: tuple = ("data",),
+) -> tuple[jax.Array, dict]:
+    """One token against the cache. Returns (logits (B, Vpad), cache')."""
+    x = jnp.take(params["embed"], tokens, axis=0)   # (B, 1, D)
+    pos = cache["pos"]
+    fam = cfg.family
+    new = dict(cache)
+    new["pos"] = pos + 1
+
+    def attn_decode(p, h, c, window):
+        out, k, v, sp = L.self_attention_decode(
+            p["attn"], L.rms_norm(h, p["ln1"]),
+            c["k"], c["v"], c["slot_pos"], pos, cfg, window,
+        )
+        return out, {"k": k, "v": v, "slot_pos": sp}
+
+    if fam in ("dense", "moe"):
+        cap = cache["self"]["k"].shape[2]
+
+        def body(h, xs):
+            p, c = xs
+            out, c2 = attn_decode(p, h, c, cap)
+            h = h + out
+            if fam == "moe":
+                o, _ = L.moe_ffn(
+                    p["moe"], L.rms_norm(h, p["ln2"]), cfg, mesh, batch_axes,
+                    capacity=-1,
+                )
+                h = h + o
+            else:
+                h = h + L.mlp(p["mlp"], L.rms_norm(h, p["ln2"]))
+            return h, c2
+
+        x, new["self"] = jax.lax.scan(body, x, (params["layers"], cache["self"]))
+
+    elif fam == "vlm":
+        g = cfg.n_layers // cfg.cross_attn_every
+        spg = cfg.cross_attn_every - 1
+        cap = cache["self"]["k"].shape[2]
+        cself = jax.tree.map(
+            lambda a: a.reshape((g, spg) + a.shape[1:]), cache["self"]
+        )
+
+        def group(h, xs):
+            p, c, mk, mv = xs
+
+            def self_body(u, ys):
+                q, cc = ys
+                out, c2 = attn_decode(q, u, cc, cap)
+                u = u + out
+                u = u + L.mlp(q["mlp"], L.rms_norm(u, q["ln2"]))
+                return u, c2
+
+            h, c2 = jax.lax.scan(self_body, h, (p["self"], c))
+            h = _cross_block(p["cross"], h, (mk, mv), cfg)
+            return h, c2
+
+        x, c2 = jax.lax.scan(
+            group, x,
+            (params["groups"], cself, cache["media_k"], cache["media_v"]),
+        )
+        new["self"] = jax.tree.map(
+            lambda a: a.reshape((g * spg,) + a.shape[2:]), c2
+        )
+
+    elif fam == "audio":
+        cap = cache["self"]["k"].shape[2]
+
+        def dec(h, xs):
+            p, c, mk, mv = xs
+            out, c2 = attn_decode(p, h, c, cap)
+            h = h + out
+            h = h + L.cross_attention(
+                p["xattn"], L.rms_norm(h, p["lnx"]), (mk, mv), cfg
+            )
+            h = h + L.mlp(p["mlp"], L.rms_norm(h, p["ln2"]))
+            return h, c2
+
+        x, new["self"] = jax.lax.scan(
+            dec, x,
+            (params["decoder"], cache["self"], cache["media_k"], cache["media_v"]),
+        )
+
+    elif fam == "hybrid":
+        g = cfg.n_layers // cfg.shared_attn_every
+        every = cfg.shared_attn_every
+        used = g * every
+        cap = cache["shared"]["k"].shape[2]
+        ssm_g = cache["ssm"][:used].reshape((g, every) + cache["ssm"].shape[1:])
+        conv_g = cache["conv"][:used].reshape((g, every) + cache["conv"].shape[1:])
+
+        def mamba_step(u, ys):
+            q, st, cv = ys
+            out, st2, cv2 = S.mamba2_decode(q, L.rms_norm(u, q["ln"]), st, cv, cfg)
+            return u + out, (st2, cv2)
+
+        def group(h, xs):
+            p, st, cv, c = xs
+            h, (st2, cv2) = jax.lax.scan(mamba_step, h, (p, st, cv))
+            ps = params["shared"]
+            out, c2 = attn_decode(ps, h, c, cap)
+            h = h + out
+            h = h + L.mlp(ps["mlp"], L.rms_norm(h, ps["ln2"]))
+            return h, (st2, cv2, c2)
+
+        x, (st2, cv2, c2) = jax.lax.scan(
+            group, x, (params["groups"]["mamba"], ssm_g, conv_g, cache["shared"])
+        )
+        ssm_new = st2.reshape((used,) + st2.shape[2:])
+        conv_new = cv2.reshape((used,) + cv2.shape[2:])
+        if "tail" in params:
+            x, (st3, cv3) = jax.lax.scan(
+                mamba_step, x,
+                (params["tail"], cache["ssm"][used:], cache["conv"][used:]),
+            )
+            ssm_new = jnp.concatenate([ssm_new, st3], axis=0)
+            conv_new = jnp.concatenate([conv_new, cv3], axis=0)
+        new["ssm"], new["conv"], new["shared"] = ssm_new, conv_new, c2
+
+    elif fam == "ssm":
+        def group(h, xs):
+            p, cm, cs = xs
+
+            def mb(u, ys):
+                q, c = ys
+                out, c2, n2, m2 = X.mlstm_decode(
+                    q, L.rms_norm(u, q["ln"]), c["c"], c["n"], c["m"], cfg
+                )
+                return u + out, {"c": c2, "n": n2, "m": m2}
+
+            h, cm2 = jax.lax.scan(mb, h, (p["mlstm"], cm))
+            out, sc, sn, sm, sh = X.slstm_decode(
+                p["slstm"], L.rms_norm(h, p["slstm"]["ln"]),
+                cs["c"], cs["n"], cs["m"], cs["h"], cfg,
+            )
+            return h + out, (cm2, {"c": sc, "n": sn, "m": sm, "h": sh})
+
+        x, (cm2, cs2) = jax.lax.scan(
+            group, x, (params["groups"], cache["mlstm"], cache["slstm"])
+        )
+        new["mlstm"], new["slstm"] = cm2, cs2
+    else:
+        raise ValueError(fam)
+
+    return _logits(params, cfg, x)[:, 0], new

@@ -1,0 +1,213 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM and sequential sLSTM.
+
+mLSTM: per-head matrix memory C (hd x hd) with exponential input gate and
+sigmoid forget gate, trained with the chunkwise-parallel form (log-space
+gate algebra, running-max stabilizer m) so the backward pass stores one
+chunk's quadratic form instead of S matrix states.
+
+sLSTM: scalar memory with a block-diagonal recurrent matrix (per-head),
+inherently sequential — lax.scan over time, carrying (c, n, m, h).
+
+Both cells run at model width d (head_dim * n_heads = d), matching the
+assigned xlstm-1.3b dims (4 heads x 512). Stabilizer follows the xLSTM
+paper: m_t = max(logf + m_{t-1}, logi).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+Params = dict[str, Any]
+
+
+# ------------------------------------------------------------------- mLSTM
+def _mlstm_chunk_scan(q, k, v, li, lf, chunk, return_state: bool = False):
+    """Chunkwise mLSTM. q/k/v: (B, S, H, p); li/lf: (B, S, H) log gates.
+
+    Carry per head: C (p, p) and n (p,) stored *pre-scaled* by exp(-m), plus
+    the running max m. Within a chunk, intra weights are
+    W[i, j] = exp(F_i - F_j + li_j - m_i) for j <= i, with
+    m_i = max(max_j(...), F_i + m_prev) so every exponent is <= 0.
+    """
+    b, s, h, p = q.shape
+    c = min(chunk, s)
+    assert s % c == 0
+    nc = s // c
+    tri = jnp.tril(jnp.ones((c, c), bool))
+
+    def reshape(x):
+        return x.reshape(b, nc, c, *x.shape[2:]).transpose(
+            1, 0, 2, *range(3, x.ndim + 1)
+        )
+
+    qc, kc, vc = reshape(q), reshape(k), reshape(v)            # (nc, B, c, H, p)
+    lic = li.reshape(b, nc, c, h).transpose(1, 0, 2, 3)        # (nc, B, c, H)
+    lfc = lf.reshape(b, nc, c, h).transpose(1, 0, 2, 3)
+
+    def step(carry, inp):
+        cmat, nvec, m_prev = carry      # (B,H,p,p), (B,H,p), (B,H)
+        qi, ki, vi, lii, lfi = inp
+        fcum = jnp.cumsum(lfi, axis=1)                          # (B, c, H)
+        # intra log weights (B, c_i, c_j, H)
+        logw = fcum[:, :, None, :] - fcum[:, None, :, :] + lii[:, None, :, :]
+        logw = jnp.where(tri[None, :, :, None], logw, -jnp.inf)
+        m_intra = jnp.max(logw, axis=2)                         # (B, c, H)
+        m_inter = fcum + m_prev[:, None, :]
+        m_i = jnp.maximum(m_intra, m_inter)                     # (B, c, H)
+        m_i = jnp.maximum(m_i, -80.0)  # keep exp() sane when all gates tiny
+        w = jnp.exp(logw - m_i[:, :, None, :])                  # (B, c, c, H)
+        binter = jnp.exp(m_inter - m_i)                         # (B, c, H)
+
+        scale = 1.0 / jnp.sqrt(p)
+        scores = jnp.einsum("bihp,bjhp->bijh", qi, ki) * scale  # (B, c, c, H)
+        aw = (scores * w.astype(scores.dtype))
+        y_num = jnp.einsum("bijh,bjhp->bihp", aw, vi)
+        y_num += jnp.einsum(
+            "bihp,bhpq,bih->bihq", qi * scale, cmat, binter.astype(qi.dtype)
+        )
+        denom = jnp.einsum("bijh->bih", aw) + jnp.einsum(
+            "bihp,bhp,bih->bih", qi * scale, nvec, binter.astype(qi.dtype)
+        )
+        denom = jnp.maximum(jnp.abs(denom), jnp.exp(-m_i).astype(denom.dtype))
+        y = y_num / denom[..., None]
+
+        # carry update (scaled by exp(-m_next))
+        ftot = fcum[:, -1, :]                                   # (B, H)
+        m_next = jnp.maximum(
+            ftot + m_prev, jnp.max(ftot[:, None, :] - fcum + lii, axis=1)
+        )
+        m_next = jnp.maximum(m_next, -80.0)
+        kw = jnp.exp(ftot[:, None, :] - fcum + lii - m_next[:, None, :])
+        cmat = cmat * jnp.exp(ftot + m_prev - m_next)[..., None, None].astype(
+            cmat.dtype
+        ) + jnp.einsum("bihp,bihq,bih->bhpq", ki, vi, kw.astype(ki.dtype))
+        nvec = nvec * jnp.exp(ftot + m_prev - m_next)[..., None].astype(
+            nvec.dtype
+        ) + jnp.einsum("bihp,bih->bhp", ki, kw.astype(ki.dtype))
+        return (cmat, nvec, m_next), y
+
+    carry0 = (
+        jnp.zeros((b, h, p, p), q.dtype),
+        jnp.zeros((b, h, p), q.dtype),
+        jnp.full((b, h), 0.0, jnp.float32),
+    )
+    carry, ys = jax.lax.scan(step, carry0, (qc, kc, vc, lic, lfc))
+    out = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    if return_state:
+        return out, carry
+    return out
+
+
+def mlstm_train(
+    p: Params, x: jax.Array, cfg: ModelConfig, return_state: bool = False
+):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, h, hd)
+    v = (x @ p["wv"]).reshape(b, s, h, hd)
+    gates = x @ p["w_if"] + p["b_if"]                           # (B, S, 2H)
+    li = gates[..., :h].astype(jnp.float32)                     # log input gate
+    lf = jax.nn.log_sigmoid(gates[..., h:].astype(jnp.float32))
+    if return_state:
+        y, (cmat, nvec, m) = _mlstm_chunk_scan(
+            q, k, v, li, lf, cfg.ssm_chunk, return_state=True
+        )
+    else:
+        y = _mlstm_chunk_scan(q, k, v, li, lf, cfg.ssm_chunk)
+    o = jax.nn.sigmoid(x @ p["wo_gate"])
+    y = y.reshape(b, s, d) * o
+    out = y @ p["wo"]
+    if return_state:
+        return out, (cmat, nvec, m)
+    return out
+
+
+def mlstm_decode(
+    p: Params, x: jax.Array, cmat: jax.Array, nvec: jax.Array, m: jax.Array,
+    cfg: ModelConfig,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One step. cmat: (B, H, p, p) (pre-scaled), nvec: (B, H, p), m: (B, H)."""
+    b = x.shape[0]
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, h, hd)
+    k = (x @ p["wk"]).reshape(b, h, hd)
+    v = (x @ p["wv"]).reshape(b, h, hd)
+    gates = (x @ p["w_if"] + p["b_if"])[:, 0]
+    li = gates[..., :h].astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(gates[..., h:].astype(jnp.float32))
+    m_next = jnp.maximum(lf + m, li)
+    m_next = jnp.maximum(m_next, -80.0)
+    fw = jnp.exp(lf + m - m_next)[..., None]
+    iw = jnp.exp(li - m_next)[..., None]
+    cmat = cmat * fw[..., None].astype(cmat.dtype) + jnp.einsum(
+        "bhp,bhq,bh1->bhpq", k, v, iw.astype(k.dtype)
+    )
+    nvec = nvec * fw.astype(nvec.dtype) + k * iw.astype(k.dtype)
+    scale = 1.0 / jnp.sqrt(hd)
+    num = jnp.einsum("bhp,bhpq->bhq", q * scale, cmat)
+    den = jnp.abs(jnp.einsum("bhp,bhp->bh", q * scale, nvec))
+    den = jnp.maximum(den, jnp.exp(-m_next).astype(den.dtype))
+    y = (num / den[..., None]).reshape(b, 1, cfg.d_model)
+    o = jax.nn.sigmoid(x @ p["wo_gate"])
+    return (y * o) @ p["wo"], cmat, nvec, m_next
+
+
+# ------------------------------------------------------------------- sLSTM
+def slstm_train(
+    p: Params, x: jax.Array, cfg: ModelConfig, return_state: bool = False
+):
+    """Sequential scalar-memory LSTM with block-diagonal recurrence."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    pre = x @ p["w_gates"] + p["b_gates"]                       # (B, S, 4d)
+    pre = pre.reshape(b, s, 4, h, hd)
+
+    def step(carry, inp):
+        cst, nst, mst, hst = carry                              # (B, h, hd) x3 + h
+        pre_t = inp                                             # (B, 4, h, hd)
+        rec = jnp.einsum("bhp,hgpq->bghq", hst, p["r_gates"])   # (B, 4, h, hd)
+        zi, zf, zz, zo = [pre_t[:, g] + rec[:, g] for g in range(4)]
+        zif = zi.astype(jnp.float32)
+        zff = jax.nn.log_sigmoid(zf.astype(jnp.float32))
+        m_new = jnp.maximum(zff + mst, zif)
+        m_new = jnp.maximum(m_new, -80.0)
+        iw = jnp.exp(zif - m_new).astype(x.dtype)
+        fw = jnp.exp(zff + mst - m_new).astype(x.dtype)
+        cst = fw * cst + iw * jnp.tanh(zz)
+        nst = fw * nst + iw
+        hst = jax.nn.sigmoid(zo) * cst / jnp.maximum(nst, 1e-6)
+        return (cst, nst, m_new, hst), hst
+
+    zeros = jnp.zeros((b, h, hd), x.dtype)
+    carry0 = (zeros, zeros, jnp.zeros((b, h, hd), jnp.float32), zeros)
+    carry, ys = jax.lax.scan(step, carry0, pre.transpose(1, 0, 2, 3, 4))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d)
+    out = y @ p["wo"]
+    if return_state:
+        return out, carry
+    return out
+
+
+def slstm_decode(
+    p: Params, x: jax.Array, cst, nst, mst, hst, cfg: ModelConfig
+):
+    b = x.shape[0]
+    h, hd = cfg.n_heads, cfg.head_dim
+    pre = (x @ p["w_gates"] + p["b_gates"]).reshape(b, 4, h, hd)
+    rec = jnp.einsum("bhp,hgpq->bghq", hst, p["r_gates"])
+    zi, zf, zz, zo = [pre[:, g] + rec[:, g] for g in range(4)]
+    zif = zi.astype(jnp.float32)
+    zff = jax.nn.log_sigmoid(zf.astype(jnp.float32))
+    m_new = jnp.maximum(jnp.maximum(zff + mst, zif), -80.0)
+    iw = jnp.exp(zif - m_new).astype(x.dtype)
+    fw = jnp.exp(zff + mst - m_new).astype(x.dtype)
+    cst = fw * cst + iw * jnp.tanh(zz)
+    nst = fw * nst + iw
+    hst = jax.nn.sigmoid(zo) * cst / jnp.maximum(nst, 1e-6)
+    y = hst.reshape(b, 1, cfg.d_model) @ p["wo"]
+    return y, cst, nst, m_new, hst

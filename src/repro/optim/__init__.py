@@ -1,0 +1,36 @@
+"""Optimizer substrate: pytree gradient transforms + the paper's staleness
+mechanism (``delayed_gradient``) and Bernoulli-importance batch weighting.
+"""
+from repro.optim.optimizers import (
+    Optimizer,
+    adam,
+    adamw,
+    add_decayed_weights,
+    apply_updates,
+    chain,
+    clip_by_global_norm,
+    cosine_schedule,
+    scale,
+    sgd,
+)
+from repro.optim.delayed import (
+    DelayedState,
+    delayed_gradient,
+    staleness_step_scale,
+)
+
+__all__ = [
+    "Optimizer",
+    "adam",
+    "adamw",
+    "add_decayed_weights",
+    "apply_updates",
+    "chain",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "scale",
+    "sgd",
+    "DelayedState",
+    "delayed_gradient",
+    "staleness_step_scale",
+]

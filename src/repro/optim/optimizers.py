@@ -1,0 +1,192 @@
+"""Gradient-transform optimizers (optax-style, no dependency on optax).
+
+An ``Optimizer`` is an (init, update) pair over parameter pytrees:
+
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Everything is a pure pytree function, so optimizers jit, shard (state
+inherits the parameter PartitionSpecs; see ``repro.sharding``), scan, and
+checkpoint like any other part of the program. ``DelayedGradient`` — the
+paper's staleness mechanism lifted to NN training — lives in
+``repro.optim.delayed`` and wraps any Optimizer defined here.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+# -------------------------------------------------------------------- chain
+def chain(*transforms: Optimizer) -> Optimizer:
+    """Compose gradient transforms left-to-right."""
+
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------- transforms
+def clip_by_global_norm(max_norm: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        leaves = jax.tree.leaves(grads)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+        scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+        return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), state
+
+    return Optimizer(init, update)
+
+
+def scale(factor: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        return jax.tree.map(lambda g: g * factor, grads), state
+
+    return Optimizer(init, update)
+
+
+def add_decayed_weights(weight_decay: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        return (
+            jax.tree.map(
+                lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params
+            ),
+            state,
+        )
+
+    return Optimizer(init, update)
+
+
+# ----------------------------------------------------------------- momentum
+class SgdState(NamedTuple):
+    momentum: PyTree
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    """SGD with (optional) heavy-ball momentum. The paper's base step is
+    plain SGD (momentum = 0): F <- F - v * L'_random."""
+
+    def init(params):
+        if momentum == 0.0:
+            return SgdState(momentum=())
+        return SgdState(
+            momentum=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        )
+
+    def update(grads, state, params):
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr * g, grads), state
+        mom = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state.momentum, grads
+        )
+        return jax.tree.map(lambda m: -lr * m, mom), SgdState(momentum=mom)
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+def adam(
+    lr: float | Callable[[jax.Array], jax.Array],
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+) -> Optimizer:
+    """Adam with f32 moments (the production default for the model zoo).
+
+    ``lr`` may be a schedule: a callable step -> learning rate.
+    """
+
+    def init(params):
+        zeros = lambda: jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros(), nu=zeros())
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr(step) if callable(lr) else lr
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads
+        )
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu,
+            grads,
+        )
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        updates = jax.tree.map(
+            lambda m, v: -lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps), mu, nu
+        )
+        return updates, AdamState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr: float | Callable,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    max_grad_norm: float = 0.0,
+) -> Optimizer:
+    """The production recipe: clip -> decay -> adam."""
+    parts = []
+    if max_grad_norm > 0:
+        parts.append(clip_by_global_norm(max_grad_norm))
+    if weight_decay > 0:
+        parts.append(add_decayed_weights(weight_decay))
+    parts.append(adam(lr, b1, b2, eps))
+    return chain(*parts)
+
+
+# ----------------------------------------------------------------- schedules
+def cosine_schedule(
+    peak_lr: float, warmup_steps: int, total_steps: int, floor: float = 0.1
+) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        frac = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return lr

@@ -1,0 +1,4 @@
+"""Batched serving: request queue + wave scheduler + greedy decode."""
+from repro.serving.engine import Completion, Request, ServingEngine
+
+__all__ = ["Completion", "Request", "ServingEngine"]

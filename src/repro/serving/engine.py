@@ -1,0 +1,152 @@
+"""Batched serving engine: request queue -> same-length waves -> greedy decode.
+
+Requests are bucketed by prompt length (production engines pad within
+buckets client-side), packed into fixed-size waves of ``slots`` sequences,
+prefilled once, then decoded together against the ring cache until every
+sequence hits EOS or its token budget. The decode tick is one jitted
+``decode_step`` over the whole wave — the shape the decode_32k dry-run
+lowers at (128, 1).
+
+Positions are shared per wave (the cache carries one ``pos`` scalar), which
+is exactly the same-length-bucket contract; continuous per-slot batching
+would need per-slot position plumbing and is noted in DESIGN.md as future
+work.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.sharding as sharding
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                  # (P,) int32
+    max_new_tokens: int = 32
+    media: np.ndarray | None = None     # (M, D) frontend embeddings
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    tokens: np.ndarray                  # generated ids (<= max_new_tokens)
+    prefill_s: float
+    decode_s: float
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        slots: int = 4,
+        max_len: int = 512,
+        eos_id: int | None = None,
+        mesh=None,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.mesh = mesh
+        baxes = sharding.batch_axes(mesh) if mesh else ()
+        self._prefill = jax.jit(
+            make_prefill_step(cfg, mesh, baxes, max_len=max_len)
+        )
+        self._decode = jax.jit(make_decode_step(cfg, mesh, baxes))
+        self._queue: collections.deque[Request] = collections.deque()
+
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt+budget exceeds max_len={self.max_len}"
+            )
+        self._queue.append(req)
+
+    # ------------------------------------------------------------------ waves
+    def _next_wave(self) -> list[Request]:
+        """Pop up to ``slots`` queued requests sharing one prompt length."""
+        if not self._queue:
+            return []
+        plen = len(self._queue[0].prompt)
+        wave, rest = [], collections.deque()
+        while self._queue:
+            r = self._queue.popleft()
+            if len(r.prompt) == plen and len(wave) < self.slots:
+                wave.append(r)
+            else:
+                rest.append(r)
+        self._queue = rest
+        return wave
+
+    def _run_wave(self, wave: list[Request]) -> list[Completion]:
+        cfg = self.cfg
+        n = len(wave)
+        pad = self.slots - n
+        prompts = np.stack([r.prompt for r in wave] + [wave[-1].prompt] * pad)
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if cfg.family in ("vlm", "audio"):
+            med = [
+                r.media
+                if r.media is not None
+                else np.zeros((cfg.n_media_tokens, cfg.d_model), np.float32)
+                for r in wave
+            ] + [np.zeros((cfg.n_media_tokens, cfg.d_model), np.float32)] * pad
+            batch["media"] = jnp.asarray(
+                np.stack(med), jnp.dtype(cfg.dtype)
+            )
+
+        t0 = time.time()
+        tok, _, cache = self._prefill(self.params, batch)
+        tok.block_until_ready()
+        t1 = time.time()
+
+        budget = max(r.max_new_tokens for r in wave)
+        outs = [tok]
+        done = np.zeros(self.slots, bool)
+        cur = tok[:, None]
+        steps = 1
+        while steps < budget and not done[:n].all():
+            cur_tok, cache = self._decode(self.params, cur, cache)
+            outs.append(cur_tok)
+            if self.eos_id is not None:
+                done |= np.asarray(cur_tok) == self.eos_id
+            cur = cur_tok[:, None]
+            steps += 1
+        jax.block_until_ready(cur)
+        t2 = time.time()
+
+        gen = np.stack([np.asarray(o) for o in outs], axis=1)  # (slots, T)
+        results = []
+        for i, r in enumerate(wave):
+            toks = gen[i, : r.max_new_tokens]
+            if self.eos_id is not None:
+                hits = np.nonzero(toks == self.eos_id)[0]
+                if hits.size:
+                    toks = toks[: hits[0] + 1]
+            results.append(
+                Completion(r.uid, toks, prefill_s=t1 - t0, decode_s=t2 - t1)
+            )
+        return results
+
+    def run(self, requests: Iterable[Request] | None = None) -> list[Completion]:
+        for r in requests or ():
+            self.submit(r)
+        done: list[Completion] = []
+        while self._queue:
+            wave = self._next_wave()
+            if not wave:
+                break
+            done.extend(self._run_wave(wave))
+        return sorted(done, key=lambda c: c.uid)

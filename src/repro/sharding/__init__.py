@@ -1,0 +1,30 @@
+"""Sharding policies: logical-axis rules + per-model specs."""
+from repro.sharding.rules import (
+    DEFAULT_RULES,
+    batch_axes,
+    named,
+    serving_rules,
+    spec_for,
+    tree_shardings,
+)
+from repro.sharding.policy import (
+    cache_specs,
+    data_specs,
+    divisible_batch_axes,
+    optimizer_state_specs,
+    param_specs,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "batch_axes",
+    "named",
+    "serving_rules",
+    "spec_for",
+    "tree_shardings",
+    "cache_specs",
+    "data_specs",
+    "divisible_batch_axes",
+    "optimizer_state_specs",
+    "param_specs",
+]

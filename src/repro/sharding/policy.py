@@ -1,0 +1,160 @@
+"""Per-model sharding policies: parameters, activations, caches, optimizer.
+
+``param_specs`` walks the declarative parameter schema, so the specs can
+never drift from the parameters. Cache specs are derived from the concrete
+cache structure plus per-family logical-axis annotations; batch/activation
+specs shard the batch over ('pod', 'data') and, when the batch is too small
+(long_500k has global_batch = 1), fall back to sharding the sequence /
+capacity dimension so the 500k-token KV cache and media context still
+distribute.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models import cache as cache_mod
+from repro.models.config import ModelConfig
+from repro.models.transformer import Entry, param_schema, _map_schema
+from repro.sharding.rules import DEFAULT_RULES, batch_axes, spec_for
+
+
+# ---------------------------------------------------------------- parameters
+def param_specs(cfg: ModelConfig, mesh: Mesh, rules=None) -> Any:
+    """Pytree of PartitionSpec congruent with ``init_params(cfg, ...)``."""
+    return _map_schema(
+        lambda path, e: spec_for(e.shape, e.axes, mesh, rules), param_schema(cfg)
+    )
+
+
+# ------------------------------------------------------------------ batches
+def data_specs(cfg: ModelConfig, mesh: Mesh, batch: int) -> dict:
+    """Specs for a training / prefill batch dict (tokens, labels, [media])."""
+    baxes = divisible_batch_axes(mesh, batch)
+    tok = P(baxes or None)
+    out = {"tokens": tok, "labels": tok}
+    if cfg.family in ("vlm", "audio"):
+        out["media"] = P(baxes or None, None, None)
+    return out
+
+
+def divisible_batch_axes(mesh: Mesh, batch: int) -> tuple[str, ...]:
+    """Largest prefix of the batch mesh axes whose product divides batch."""
+    got: list[str] = []
+    rem = batch
+    for a in batch_axes(mesh):
+        size = dict(mesh.shape)[a]
+        if rem % size == 0:
+            got.append(a)
+            rem //= size
+    return tuple(got)
+
+
+# -------------------------------------------------------------------- caches
+def _attn_cache_spec(mesh: Mesh, k_shape, baxes, used_batch) -> dict:
+    """(L, B, C, KV, hd) ring-cache specs with the heads->capacity ladder."""
+    _, b, cap, kv, hd = k_shape
+    names = dict(mesh.shape)
+    model = names.get("model", 1)
+    free_batch = [a for a in ("pod", "data") if names.get(a, 1) > 1 and a not in used_batch]
+    kv_spec: Any = None
+    cap_spec: Any = None
+    hd_spec: Any = None
+    if model > 1 and kv % model == 0:
+        kv_spec = "model"
+    elif model > 1 and cap % model == 0:
+        cap_spec = "model"
+    elif model > 1 and hd % model == 0:
+        hd_spec = "model"
+    # leftover batch-ish axes soak into capacity (long-context, tiny batch)
+    extra = tuple(a for a in free_batch if cap % names[a] == 0)
+    if extra:
+        cap_spec = (
+            extra if cap_spec is None else ((cap_spec,) + extra)
+        )
+    return {
+        "k": P(None, used_batch or None, cap_spec, kv_spec, hd_spec),
+        "v": P(None, used_batch or None, cap_spec, kv_spec, hd_spec),
+        "slot_pos": P(),
+    }
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int, seq_len: int) -> dict:
+    """Specs congruent with ``cache_structure(cfg, batch, seq_len)``."""
+    struct = cache_mod.cache_structure(cfg, batch, seq_len)
+    baxes = divisible_batch_axes(mesh, batch)
+    names = dict(mesh.shape)
+    model = names.get("model", 1)
+
+    def model_if(dim: int):
+        return "model" if model > 1 and dim % model == 0 else None
+
+    out: dict = {"pos": P()}
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        out["self"] = _attn_cache_spec(mesh, struct["self"]["k"].shape, baxes, baxes)
+    elif fam in ("vlm", "audio"):
+        out["self"] = _attn_cache_spec(mesh, struct["self"]["k"].shape, baxes, baxes)
+        mk = struct["media_k"].shape       # (L, B, M, KV, hd)
+        out["media_k"] = P(None, baxes or None, None, model_if(mk[3]), None)
+        out["media_v"] = out["media_k"]
+    elif fam == "hybrid":
+        ssm = struct["ssm"].shape          # (L, B, nh, hp, st)
+        out["ssm"] = P(None, baxes or None, model_if(ssm[2]), None, None)
+        cv = struct["conv"].shape          # (L, B, K-1, conv_ch)
+        out["conv"] = P(None, baxes or None, None, model_if(cv[3]))
+        out["shared"] = _attn_cache_spec(
+            mesh, struct["shared"]["k"].shape, baxes, baxes
+        )
+    elif fam == "ssm":
+        mc = struct["mlstm"]["c"].shape    # (ng, mpg, B, h, hd, hd)
+        hspec = model_if(mc[3])
+        hdspec = None if hspec else model_if(mc[4])
+        out["mlstm"] = {
+            # shard the matrix memory on its OUTPUT dim (q of C[p,q]): the
+            # read einsum contracts p, so a p-shard forces an all-gather of
+            # the f32 memory every step (+1.4 GB/token observed); a q-shard
+            # keeps read and update fully local.
+            "c": P(None, None, baxes or None, hspec, None, hdspec),
+            "n": P(None, None, baxes or None, hspec, hdspec),
+            "m": P(None, None, baxes or None, hspec),
+        }
+        sc = struct["slstm"]["c"].shape    # (ng, B, h, hd)
+        shs = model_if(sc[2])
+        shd = None if shs else model_if(sc[3])
+        sspec = P(None, baxes or None, shs, shd)
+        out["slstm"] = {"c": sspec, "n": sspec, "m": sspec, "h": sspec}
+    else:
+        raise ValueError(fam)
+    return out
+
+
+# ----------------------------------------------------------------- optimizer
+def optimizer_state_specs(state_shape: Any, pspecs: Any) -> Any:
+    """Specs for an optimizer state pytree: moments inherit the parameter
+    specs (ZeRO — the state is sharded exactly as far as the parameters),
+    ring buffers get a leading replicated delay axis, scalars replicate."""
+    from repro.optim.delayed import DelayedState
+    from repro.optim.optimizers import AdamState, SgdState
+
+    if isinstance(state_shape, AdamState):
+        return AdamState(step=P(), mu=pspecs, nu=pspecs)
+    if isinstance(state_shape, SgdState):
+        mom = state_shape.momentum
+        return SgdState(momentum=pspecs if mom != () else ())
+    if isinstance(state_shape, DelayedState):
+        ring = jax.tree.map(
+            lambda s: P(*((None,) + tuple(s))),
+            pspecs,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        return DelayedState(
+            step=P(),
+            ring=ring,
+            inner=optimizer_state_specs(state_shape.inner, pspecs),
+        )
+    if isinstance(state_shape, tuple) and not hasattr(state_shape, "_fields"):
+        return tuple(optimizer_state_specs(s, pspecs) for s in state_shape)
+    raise TypeError(f"unknown optimizer state node {type(state_shape)}")

@@ -1,0 +1,39 @@
+"""Decision-tree substrate: binning, histogram tree learner, forests.
+
+Everything here is shape-static and jit-able: trees are dense heap-indexed
+arrays, growth is level-wise (the paper's "well-grown tree" assumption), and
+all control flow is ``jax.lax``.
+"""
+from repro.trees.binning import BinnedData, make_bins, apply_bins, bin_dataset
+from repro.trees.losses import (
+    logistic_grad_hess,
+    logistic_loss,
+    mse_grad_hess,
+    mse_loss,
+    sigmoid2,
+)
+from repro.trees.tree import Tree, apply_tree, empty_tree, tree_num_nodes
+from repro.trees.forest import Forest, empty_forest, forest_predict, forest_push
+from repro.trees.learner import LearnerConfig, build_tree
+
+__all__ = [
+    "BinnedData",
+    "make_bins",
+    "apply_bins",
+    "bin_dataset",
+    "logistic_grad_hess",
+    "logistic_loss",
+    "mse_grad_hess",
+    "mse_loss",
+    "sigmoid2",
+    "Tree",
+    "apply_tree",
+    "empty_tree",
+    "tree_num_nodes",
+    "Forest",
+    "empty_forest",
+    "forest_predict",
+    "forest_push",
+    "LearnerConfig",
+    "build_tree",
+]

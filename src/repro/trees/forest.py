@@ -1,0 +1,61 @@
+"""Fixed-capacity forests: stacked tree arrays + a fill count.
+
+The server's additive model F(x) = sum_t v * Tree_t(x) lives here. Capacity
+is static (the paper always fixes the total tree budget T up front), so the
+forest is a pytree that jit/scan can carry.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.trees.tree import Tree, tree_num_nodes
+
+
+class Forest(NamedTuple):
+    feature: jax.Array     # (T, 2^d - 1) int32
+    threshold: jax.Array   # (T, 2^d - 1) int32
+    leaf_value: jax.Array  # (T, 2^d) f32 — already scaled by the step length
+    n_trees: jax.Array     # () int32 — how many slots are live
+    base_score: jax.Array  # () f32 — the paper's init tree (prior log-odds)
+
+    @property
+    def depth(self) -> int:
+        return int(self.leaf_value.shape[-1]).bit_length() - 1
+
+
+def empty_forest(capacity: int, depth: int, base_score=0.0) -> Forest:
+    n_int, n_leaf = tree_num_nodes(depth)
+    return Forest(
+        feature=jnp.zeros((capacity, n_int), jnp.int32),
+        threshold=jnp.full((capacity, n_int), 2**30, jnp.int32),
+        leaf_value=jnp.zeros((capacity, n_leaf), jnp.float32),
+        n_trees=jnp.asarray(0, jnp.int32),
+        base_score=jnp.asarray(base_score, jnp.float32),
+    )
+
+
+def forest_push(forest: Forest, tree: Tree, step_length: jax.Array) -> Forest:
+    """Server fold-in: F <- F + v * Tree (Algorithm 3, server step 2)."""
+    t = forest.n_trees
+    return forest._replace(
+        feature=jax.lax.dynamic_update_index_in_dim(forest.feature, tree.feature, t, 0),
+        threshold=jax.lax.dynamic_update_index_in_dim(
+            forest.threshold, tree.threshold, t, 0
+        ),
+        leaf_value=jax.lax.dynamic_update_index_in_dim(
+            forest.leaf_value, tree.leaf_value * step_length, t, 0
+        ),
+        n_trees=t + 1,
+    )
+
+
+def forest_predict(forest: Forest, bins: jax.Array) -> jax.Array:
+    """F(x) over binned inputs (N, F) -> (N,). Empty slots predict 0."""
+    pred = ops.apply_forest(
+        bins, forest.feature, forest.threshold, forest.leaf_value, forest.depth
+    )
+    return forest.base_score + pred

@@ -1,0 +1,82 @@
+"""Dense heap-indexed decision trees.
+
+A depth-``d`` tree is stored as flat arrays: internal nodes 0..2^d-2 in
+level order (children of i are 2i+1 / 2i+2), leaves are the 2^d slots of the
+final level. Unsplittable nodes degrade to pass-through splits (everything
+routes left); both children inherit the parent statistics so predictions are
+identical to an early-stopped tree. Fixed shapes keep every consumer jittable
+and make forests stackable into (T, ...) arrays.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Tree(NamedTuple):
+    """One regression tree over binned features.
+
+    Attributes:
+      feature: (2^d - 1,) int32 — split feature per internal node.
+      threshold: (2^d - 1,) int32 — split bin; route left iff bin <= threshold.
+      leaf_value: (2^d,) float32 — output per leaf.
+
+    Depth is *derived* from shapes (so Tree stays a pure array pytree that
+    can cross jit boundaries): depth = log2(len(leaf_value)).
+    """
+
+    feature: jax.Array
+    threshold: jax.Array
+    leaf_value: jax.Array
+
+    @property
+    def depth(self) -> int:
+        return int(self.leaf_value.shape[-1]).bit_length() - 1
+
+
+def tree_num_nodes(depth: int) -> tuple[int, int]:
+    """(n_internal, n_leaves) for a full tree of the given depth."""
+    return (1 << depth) - 1, 1 << depth
+
+
+def empty_tree(depth: int) -> Tree:
+    n_internal, n_leaves = tree_num_nodes(depth)
+    return Tree(
+        feature=jnp.zeros((n_internal,), jnp.int32),
+        threshold=jnp.full((n_internal,), 2**30, jnp.int32),  # all-left
+        leaf_value=jnp.zeros((n_leaves,), jnp.float32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def _leaf_index(
+    bins: jax.Array, feature: jax.Array, threshold: jax.Array, depth: int
+) -> jax.Array:
+    """Route samples (N, F) to leaf indices (N,) by a depth-step heap walk."""
+    n = bins.shape[0]
+    node = jnp.zeros((n,), jnp.int32)
+
+    def step(_, node):
+        feat = jnp.take(feature, node)
+        thr = jnp.take(threshold, node)
+        val = jnp.take_along_axis(bins, feat[:, None], axis=1)[:, 0]
+        go_right = (val > thr).astype(jnp.int32)
+        return 2 * node + 1 + go_right
+
+    node = jax.lax.fori_loop(0, depth, step, node)
+    n_internal = (1 << depth) - 1
+    return node - n_internal
+
+
+def apply_tree(tree: Tree, bins: jax.Array) -> jax.Array:
+    """Predict (N,) float32 for binned inputs (N, F)."""
+    leaf = _leaf_index(bins, tree.feature, tree.threshold, tree.depth)
+    return jnp.take(tree.leaf_value, leaf)
+
+
+def leaf_indices(tree: Tree, bins: jax.Array) -> jax.Array:
+    """Expose leaf routing — used by tests and by the projection analysis."""
+    return _leaf_index(bins, tree.feature, tree.threshold, tree.depth)

@@ -1,0 +1,43 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the real
+single CPU device; only the dry-run process forces 512 host devices."""
+import jax
+import numpy as np
+import pytest
+
+import repro.data as data_mod
+from repro.core.sgbdt import SGBDTConfig
+from repro.trees.learner import LearnerConfig
+
+
+@pytest.fixture(scope="session")
+def sparse_data():
+    """Small high-diversity sparse classification set (real-sim-like)."""
+    return data_mod.make_sparse_classification(600, 150, 8, seed=3)
+
+
+@pytest.fixture(scope="session")
+def dense_lowdiv_data():
+    """Low-diversity dense set (Higgs-like, Fig. 4a multiplicities)."""
+    return data_mod.make_dense_low_diversity(50, 12, 5_000, seed=5)
+
+
+@pytest.fixture(scope="session")
+def fast_cfg():
+    # NOTE: n_bins must match the dataset quantization (synthetic.py bins at
+    # 64) — a smaller learner n_bins would alias bins across features.
+    return SGBDTConfig(
+        n_trees=30,
+        step_length=0.3,
+        sampling_rate=0.8,
+        learner=LearnerConfig(depth=4, n_bins=64),
+    )
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)

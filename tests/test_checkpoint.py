@@ -1,0 +1,95 @@
+"""Checkpoint round-trips for every state the framework persists."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+import repro.models as M
+import repro.optim as O
+from repro.checkpoint import (
+    CheckpointManager,
+    latest_step,
+    restore_pytree,
+    save_pytree,
+)
+
+
+def test_roundtrip_params_and_opt_state(tmp_path, key):
+    cfg = configs.get("granite-3-2b").reduced()
+    params = M.init_params(cfg, key)
+    opt = O.delayed_gradient(O.adamw(1e-3, max_grad_norm=1.0), 2)
+    state = opt.init(params)
+    save_pytree(tmp_path, 7, {"params": params, "opt": state})
+    back = restore_pytree(tmp_path, 7, {"params": params, "opt": state})
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves({"params": params, "opt": state})):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_roundtrip_gbdt_state(tmp_path, fast_cfg, sparse_data):
+    from repro.core.sgbdt import train_serial
+    from repro.trees import forest_predict
+
+    st = train_serial(fast_cfg._replace(n_trees=5), sparse_data, seed=0)
+    save_pytree(tmp_path, 1, st._asdict())
+    back = restore_pytree(tmp_path, 1, st._asdict())
+    np.testing.assert_allclose(np.asarray(back["f"]), np.asarray(st.f))
+    # restored forest predicts identically
+    from repro.trees.forest import Forest
+
+    f2 = Forest(**back["forest"]._asdict()) if hasattr(back["forest"], "_asdict") else st.forest
+    np.testing.assert_allclose(
+        np.asarray(forest_predict(st.forest, sparse_data.bins)),
+        np.asarray(forest_predict(f2, sparse_data.bins)),
+    )
+
+
+def test_bfloat16_roundtrip(tmp_path):
+    tree = {"w": jnp.ones((8, 8), jnp.bfloat16) * 1.5}
+    save_pytree(tmp_path, 0, tree)
+    back = restore_pytree(tmp_path, 0, tree)
+    assert back["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(back["w"], np.float32), 1.5)
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    save_pytree(tmp_path, 0, {"w": jnp.zeros((4,))})
+    with pytest.raises(ValueError, match="shape"):
+        restore_pytree(tmp_path, 0, {"w": jnp.zeros((5,))})
+
+
+def test_missing_leaf_rejected(tmp_path):
+    save_pytree(tmp_path, 0, {"w": jnp.zeros((4,))})
+    with pytest.raises(KeyError):
+        restore_pytree(tmp_path, 0, {"w": jnp.zeros((4,)), "extra": jnp.zeros(1)})
+
+
+def test_corruption_detected(tmp_path):
+    save_pytree(tmp_path, 0, {"w": jnp.arange(16.0)})
+    # flip a byte in the payload
+    leaf = tmp_path / "step_000000" / "leaf_00000.npy"
+    raw = bytearray(leaf.read_bytes())
+    raw[-1] ^= 0xFF
+    leaf.write_bytes(bytes(raw))
+    with pytest.raises(ValueError, match="CRC"):
+        restore_pytree(tmp_path, 0, {"w": jnp.arange(16.0)}, check_crc=True)
+
+
+def test_manager_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, save_every=2, keep=2)
+    tree = {"x": jnp.zeros(3)}
+    for step in range(1, 9):
+        mgr.maybe_save(step, tree)
+    assert latest_step(tmp_path) == 8
+    steps = sorted(p.name for p in tmp_path.iterdir())
+    assert steps == ["step_000006", "step_000008"]
+    got_step, got = mgr.restore_latest(tree)
+    assert got_step == 8
+    np.testing.assert_array_equal(np.asarray(got["x"]), 0.0)
+
+
+def test_atomic_overwrite(tmp_path):
+    save_pytree(tmp_path, 3, {"w": jnp.zeros(2)})
+    save_pytree(tmp_path, 3, {"w": jnp.ones(2)})
+    back = restore_pytree(tmp_path, 3, {"w": jnp.zeros(2)})
+    np.testing.assert_array_equal(np.asarray(back["w"]), 1.0)

@@ -1,0 +1,241 @@
+"""Per-kernel correctness: Pallas (interpret mode) vs the pure-jnp oracle,
+swept over shapes/dtypes, plus hypothesis property tests on the semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.histogram import histogram_pallas
+from repro.kernels.split_scan import split_gain_pallas
+
+
+def _rand_case(key, n, f, n_bins, n_nodes, grad_dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    bins = jax.random.randint(k1, (n, f), 0, n_bins, dtype=jnp.int32)
+    node = jax.random.randint(k2, (n,), -1, n_nodes, dtype=jnp.int32)
+    grad = jax.random.normal(k3, (n,), grad_dtype)
+    hess = jax.random.uniform(k4, (n,), grad_dtype)
+    return bins, node, grad, hess
+
+
+# ---------------------------------------------------------------- histogram
+SHAPE_SWEEP = [
+    # (N, F, n_bins, n_nodes)
+    (64, 4, 8, 1),
+    (300, 10, 16, 4),
+    (512, 8, 32, 8),
+    (1000, 17, 64, 16),     # non-multiple N and F -> exercises padding
+    (2048, 32, 64, 32),
+]
+
+
+@pytest.mark.parametrize("n,f,n_bins,n_nodes", SHAPE_SWEEP)
+def test_histogram_pallas_matches_ref(key, n, f, n_bins, n_nodes):
+    bins, node, grad, hess = _rand_case(key, n, f, n_bins, n_nodes)
+    out_ref = ref.histogram_ref(bins, node, grad, hess, n_nodes, n_bins)
+    out_pal = ops.build_histogram(
+        bins, node, grad, hess, n_nodes, n_bins, backend="pallas"
+    )
+    np.testing.assert_allclose(out_ref, out_pal, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("sample_block,feature_block", [(128, 4), (256, 8), (512, 16)])
+def test_histogram_pallas_block_shapes(key, sample_block, feature_block):
+    """Kernel result must be invariant to BlockSpec tiling choices."""
+    bins, node, grad, hess = _rand_case(key, 1024, 16, 16, 4)
+    base = ref.histogram_ref(bins, node, grad, hess, 4, 16)
+    out = histogram_pallas(
+        bins, node, grad, hess, 4, 16,
+        sample_block=sample_block, feature_block=feature_block, interpret=True,
+    )
+    np.testing.assert_allclose(base, out, rtol=1e-5, atol=1e-4)
+
+
+def test_histogram_inactive_samples_ignored(key):
+    bins, node, grad, hess = _rand_case(key, 256, 6, 8, 4)
+    node_off = jnp.where(jnp.arange(256) % 2 == 0, node, -1)
+    out = ref.histogram_ref(bins, node_off, grad, hess, 4, 8)
+    # recompute with only active samples
+    act = np.asarray(node_off) >= 0
+    out2 = ref.histogram_ref(
+        jnp.asarray(np.asarray(bins)[act]),
+        jnp.asarray(np.asarray(node_off)[act]),
+        jnp.asarray(np.asarray(grad)[act]),
+        jnp.asarray(np.asarray(hess)[act]),
+        4, 8,
+    )
+    np.testing.assert_allclose(out, out2, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(8, 200),
+    f=st.integers(1, 12),
+    n_bins=st.sampled_from([4, 8, 16]),
+    n_nodes=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_histogram_mass_conservation(n, f, n_bins, n_nodes, seed):
+    """Property: summing a histogram over (node, bin) recovers the total
+    grad/hess mass of active samples, for every feature."""
+    key = jax.random.PRNGKey(seed)
+    bins, node, grad, hess = _rand_case(key, n, f, n_bins, n_nodes)
+    out = ref.histogram_ref(bins, node, grad, hess, n_nodes, n_bins)
+    active = np.asarray(node) >= 0
+    tg = float(np.sum(np.asarray(grad)[active]))
+    th = float(np.sum(np.asarray(hess)[active]))
+    per_feature_g = np.asarray(out[0].sum(axis=(0, 2)))
+    per_feature_h = np.asarray(out[1].sum(axis=(0, 2)))
+    np.testing.assert_allclose(per_feature_g, tg, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(per_feature_h, th, rtol=1e-3, atol=1e-3)
+
+
+# --------------------------------------------------------------- split gain
+@pytest.mark.parametrize("l,f,b", [(1, 4, 8), (4, 8, 16), (8, 16, 64), (16, 7, 32)])
+def test_split_gain_pallas_matches_ref(key, l, f, b):
+    hist = jax.random.uniform(key, (2, l, f, b), jnp.float32)
+    g_ref = ops.split_gain(hist, 1.0, 1e-3, backend="ref")
+    g_pal = ops.split_gain(hist, 1.0, 1e-3, backend="pallas")
+    ref_m = np.where(np.isfinite(g_ref), np.asarray(g_ref), -1e30)
+    pal_m = np.where(np.isfinite(g_pal), np.asarray(g_pal), -1e30)
+    np.testing.assert_allclose(ref_m, pal_m, rtol=1e-4, atol=1e-4)
+
+
+def test_split_gain_last_bin_invalid(key):
+    hist = jax.random.uniform(key, (2, 2, 3, 8), jnp.float32)
+    gain = ops.split_gain(hist, 1.0, 0.0, backend="ref")
+    assert bool(np.all(~np.isfinite(np.asarray(gain)[..., -1])))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), b=st.sampled_from([8, 16, 32]))
+def test_split_gain_nonnegative_at_optimum(seed, b):
+    """Property: gain of the argmax split is >= 0 whenever any split is
+    valid (splitting cannot hurt the regularized objective)."""
+    key = jax.random.PRNGKey(seed)
+    g = jax.random.normal(key, (2, 1, 4, b), jnp.float32)
+    hist = g.at[1].set(jnp.abs(g[1]) + 0.1)
+    best, feat, thr = ref.split_scan_ref(
+        hist, jnp.float32(1.0), jnp.float32(1e-6)
+    )
+    valid = np.isfinite(float(best[0]))
+    if valid:
+        assert float(best[0]) >= -1e-4
+
+
+def test_best_split_agrees_with_bruteforce(key):
+    hist = jax.random.uniform(key, (2, 3, 5, 16), jnp.float32)
+    lam, minh = 0.5, 1e-3
+    best, feat, thr = ref.split_scan_ref(hist, jnp.float32(lam), jnp.float32(minh))
+    g, h = np.asarray(hist[0]), np.asarray(hist[1])
+    for node in range(3):
+        best_gain = -np.inf
+        for fi in range(5):
+            gl = hl = 0.0
+            gt, ht = g[node, fi].sum(), h[node, fi].sum()
+            for bi in range(15):  # last bin invalid
+                gl += g[node, fi, bi]
+                hl += h[node, fi, bi]
+                gr, hr = gt - gl, ht - hl
+                if hl < minh or hr < minh:
+                    continue
+                gain = gl**2 / (hl + lam) + gr**2 / (hr + lam) - gt**2 / (ht + lam)
+                best_gain = max(best_gain, gain)
+        np.testing.assert_allclose(float(best[node]), best_gain, rtol=1e-4)
+
+
+# ----------------------------------------------------------- flash attention
+FLASH_SWEEP = [
+    # (b, sq, sk, h, kv, hd, causal)
+    (2, 128, 128, 4, 4, 64, True),
+    (2, 128, 128, 4, 4, 64, False),
+    (1, 256, 256, 8, 2, 64, True),     # GQA group 4
+    (2, 100, 100, 4, 2, 32, True),     # padding path
+    (1, 96, 96, 2, 2, 128, False),     # non-causal + padding (kv mask)
+    (2, 64, 192, 4, 4, 64, False),     # cross-shaped (Sq != Sk)
+]
+
+
+@pytest.mark.parametrize("b,sq,sk,h,kv,hd,causal", FLASH_SWEEP)
+def test_flash_attention_matches_ref(key, b, sq, sk, h, kv, hd, causal):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (b, sq, h, hd))
+    kk = jax.random.normal(k2, (b, sk, kv, hd))
+    v = jax.random.normal(k3, (b, sk, kv, hd))
+    o_ref = ops.flash_attention(q, kk, v, causal=causal, backend="ref")
+    o_pal = ops.flash_attention(
+        q, kk, v, causal=causal, backend="pallas", block_q=64, block_k=64
+    )
+    np.testing.assert_allclose(o_ref, o_pal, rtol=1e-4, atol=1e-5)
+
+
+def test_flash_attention_bf16(key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (2, 128, 4, 64), jnp.bfloat16)
+    kk = jax.random.normal(k2, (2, 128, 4, 64), jnp.bfloat16)
+    v = jax.random.normal(k3, (2, 128, 4, 64), jnp.bfloat16)
+    o_ref = ops.flash_attention(q, kk, v, backend="ref").astype(jnp.float32)
+    o_pal = ops.flash_attention(q, kk, v, backend="pallas").astype(jnp.float32)
+    np.testing.assert_allclose(o_ref, o_pal, rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("bq,bk", [(32, 32), (64, 128), (128, 64)])
+def test_flash_attention_block_invariance(key, bq, bk):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (1, 256, 4, 64))
+    kk = jax.random.normal(k2, (1, 256, 4, 64))
+    v = jax.random.normal(k3, (1, 256, 4, 64))
+    base = ops.flash_attention(q, kk, v, backend="ref")
+    out = ops.flash_attention(q, kk, v, backend="pallas", block_q=bq, block_k=bk)
+    np.testing.assert_allclose(base, out, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,sq,sk,h,kv,hd,causal", FLASH_SWEEP)
+def test_flash_attention_backward_matches_ref(key, b, sq, sk, h, kv, hd, causal):
+    """The fused Pallas dq/dk/dv kernels vs grads through the oracle."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (b, sq, h, hd))
+    kk = jax.random.normal(k2, (b, sk, kv, hd))
+    v = jax.random.normal(k3, (b, sk, kv, hd))
+
+    def loss(backend):
+        def f(q_, k_, v_):
+            out = ops.flash_attention(
+                q_, k_, v_, causal=causal, backend=backend,
+                block_q=64, block_k=64,
+            )
+            return jnp.sum(jnp.sin(out))
+        return f
+
+    gp = jax.grad(loss("pallas"), argnums=(0, 1, 2))(q, kk, v)
+    gr = jax.grad(loss("ref"), argnums=(0, 1, 2))(q, kk, v)
+    for a, b_ in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# -------------------------------------------------------------- apply_forest
+def test_apply_forest_matches_tree_sum(key):
+    from repro.trees import LearnerConfig, build_tree, empty_forest, forest_push
+    from repro.trees.tree import apply_tree
+
+    bins = jax.random.randint(key, (200, 6), 0, 16, dtype=jnp.int32)
+    forest = empty_forest(3, depth=3)
+    total = jnp.zeros(200)
+    for i in range(3):
+        k = jax.random.fold_in(key, i)
+        g = jax.random.normal(k, (200,))
+        tree = build_tree(
+            LearnerConfig(depth=3, n_bins=16, feature_fraction=1.0),
+            bins, g, jnp.ones(200), k,
+        )
+        forest = forest_push(forest, tree, jnp.float32(0.5))
+        total = total + 0.5 * apply_tree(tree, bins)
+    from repro.trees import forest_predict
+    np.testing.assert_allclose(
+        np.asarray(forest_predict(forest, bins)),
+        np.asarray(forest.base_score + total),
+        rtol=1e-5, atol=1e-5,
+    )

@@ -1,0 +1,131 @@
+"""The paper's core: serial SGBDT, asynch-SGBDT, and their invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.async_sgbdt import (
+    constant_delay,
+    max_staleness,
+    train_async,
+    train_async_scan,
+    worker_round_robin,
+)
+from repro.core.sgbdt import init_state, sgbdt_round, train_loss, train_serial
+from repro.trees import forest_predict
+
+
+def test_serial_converges(fast_cfg, sparse_data):
+    state = train_serial(fast_cfg, sparse_data, seed=0)
+    l0 = float(train_loss(fast_cfg, sparse_data, init_state(fast_cfg, sparse_data)))
+    l1 = float(train_loss(fast_cfg, sparse_data, state))
+    assert l1 < 0.8 * l0, f"no convergence: {l0} -> {l1}"
+
+
+def test_forest_predict_consistent_with_f(fast_cfg, sparse_data):
+    """The maintained F vector must equal evaluating the forest on the
+    training bins — the server state is self-consistent."""
+    state = train_serial(fast_cfg, sparse_data, seed=1)
+    f_eval = forest_predict(state.forest, sparse_data.bins)
+    np.testing.assert_allclose(
+        np.asarray(f_eval), np.asarray(state.f), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_async_w1_equals_serial(fast_cfg, sparse_data):
+    """tau = 0 degeneracy: one worker is exactly the serial trainer."""
+    st_serial = train_serial(fast_cfg, sparse_data, seed=0)
+    st_async = train_async(
+        fast_cfg, sparse_data, worker_round_robin(fast_cfg.n_trees, 1), seed=0
+    )
+    np.testing.assert_allclose(
+        np.asarray(st_serial.f), np.asarray(st_async.f), atol=1e-5
+    )
+
+
+def test_scan_equals_loop(fast_cfg, sparse_data):
+    sched = worker_round_robin(fast_cfg.n_trees, 8)
+    ring = max_staleness(sched) + 1
+    keys = jax.random.split(jax.random.PRNGKey(0), fast_cfg.n_trees)
+    st_scan, losses = train_async_scan(
+        fast_cfg, sparse_data, jnp.asarray(sched), keys, ring
+    )
+    st_loop = train_async(fast_cfg, sparse_data, sched, seed=0)
+    np.testing.assert_allclose(
+        np.asarray(st_scan.f), np.asarray(st_loop.f), atol=1e-5
+    )
+    assert losses.shape == (fast_cfg.n_trees,)
+    assert float(losses[-1]) < float(losses[0])
+
+
+def test_async_converges_with_staleness(fast_cfg, sparse_data):
+    """Prop. 1: asynch-SGBDT still converges under bounded delay (the
+    high-diversity dataset regime)."""
+    for w in (4, 16):
+        st = train_async(
+            fast_cfg, sparse_data, worker_round_robin(fast_cfg.n_trees, w), seed=0
+        )
+        l0 = float(
+            train_loss(fast_cfg, sparse_data, init_state(fast_cfg, sparse_data))
+        )
+        l1 = float(train_loss(fast_cfg, sparse_data, st))
+        assert l1 < 0.85 * l0, f"W={w}: {l0} -> {l1}"
+
+
+def test_constant_delay_schedule():
+    s = constant_delay(10, 3)
+    assert (s == np.array([0, 0, 0, 0, 1, 2, 3, 4, 5, 6])).all()
+    assert max_staleness(s) == 3
+
+
+def test_round_robin_schedule():
+    s = worker_round_robin(8, 1)
+    assert (s == np.arange(8)).all()       # serial: zero staleness
+    s4 = worker_round_robin(8, 4)
+    assert (s4 == np.array([0, 0, 0, 0, 1, 2, 3, 4])).all()
+    assert max_staleness(s4) == 4 - 1 + 0 or max_staleness(s4) >= 3
+
+
+def test_stale_round_uses_stale_target(fast_cfg, sparse_data):
+    """sgbdt_round builds the tree against f_target, not state.f."""
+    state = init_state(fast_cfg, sparse_data)
+    key = jax.random.PRNGKey(7)
+    fresh = sgbdt_round(fast_cfg, sparse_data, state, state.f, key)
+    stale_target = state.f + 5.0            # wildly different target
+    stale = sgbdt_round(fast_cfg, sparse_data, state, stale_target, key)
+    assert not np.allclose(np.asarray(fresh.f), np.asarray(stale.f))
+
+
+def test_newton_step_serial_converges(fast_cfg, sparse_data):
+    """xgboost-style Newton leaves: a better serial learner (paper
+    conclusion 2 says it's the ASYNC setting where Newton breaks)."""
+    cfg = fast_cfg._replace(step_kind="newton")
+    st = train_serial(cfg, sparse_data, seed=0)
+    l0 = float(train_loss(cfg, sparse_data, init_state(cfg, sparse_data)))
+    l1 = float(train_loss(cfg, sparse_data, st))
+    assert l1 < 0.8 * l0
+
+
+def test_newton_more_staleness_sensitive(fast_cfg, sparse_data):
+    """Paper conclusion 2: Newton degrades more than gradient under the
+    same staleness."""
+    res = {}
+    for kind in ("gradient", "newton"):
+        cfg = fast_cfg._replace(step_kind=kind)
+        l1 = float(train_loss(cfg, sparse_data, train_async(
+            cfg, sparse_data, worker_round_robin(cfg.n_trees, 1), seed=0)))
+        l16 = float(train_loss(cfg, sparse_data, train_async(
+            cfg, sparse_data, worker_round_robin(cfg.n_trees, 16), seed=0)))
+        res[kind] = l16 - l1
+    assert res["newton"] > res["gradient"], res
+
+
+def test_mse_loss_path(fast_cfg):
+    import repro.data as D
+
+    data = D.make_sparse_regression(400, 120, 10, seed=9)
+    cfg = fast_cfg._replace(loss="mse")
+    st = train_serial(cfg, data, seed=0)
+    l0 = float(train_loss(cfg, data, init_state(cfg, data)))
+    l1 = float(train_loss(cfg, data, st))
+    assert l1 < 0.9 * l0

@@ -1,0 +1,163 @@
+"""Sharding rules + per-arch policies, validated against the production mesh
+geometry. ``spec_for``/``param_specs``/``cache_specs`` only read
+``mesh.shape``, so a lightweight stand-in mesh lets these run on 1 device
+(real lower+compile coverage lives in the dry-run)."""
+import dataclasses
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+import repro.configs as configs
+import repro.sharding as SH
+from repro.launch.shapes import SHAPES, shape_skip_reason
+from repro.models.transformer import Entry, _map_schema, param_schema
+
+
+@dataclasses.dataclass
+class FakeMesh:
+    shape: dict
+
+
+SINGLE = FakeMesh({"data": 16, "model": 16})
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16})
+ARCHS = list(configs.ALIASES)
+
+
+def _iter_specs(specs):
+    out = []
+
+    def walk(node):
+        if isinstance(node, P):
+            out.append(node)
+        elif isinstance(node, dict):
+            for v in node.values():
+                walk(v)
+
+    walk(specs)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("mesh", [SINGLE, MULTI], ids=["single", "multi"])
+def test_param_specs_divisible(arch, mesh):
+    """Every sharded dim must be divisible by the product of its mesh axes,
+    and no mesh axis may appear twice in one spec."""
+    cfg = configs.get(arch)
+    schema = param_schema(cfg)
+    flat: list = []
+    _map_schema(lambda path, e: flat.append((path, e)), schema)
+    for path, e in flat:
+        spec = SH.spec_for(e.shape, e.axes, mesh)
+        used = []
+        for dim, part in zip(e.shape, tuple(spec)):
+            if part is None:
+                continue
+            axes = part if isinstance(part, tuple) else (part,)
+            prod = 1
+            for a in axes:
+                assert a not in used, f"{arch} {path}: axis {a} reused"
+                used.append(a)
+                prod *= mesh.shape[a]
+            assert dim % prod == 0, f"{arch} {path}: {dim} % {prod}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_big_params_are_sharded(arch):
+    """No tensor above 64 MB may stay fully replicated on the single-pod
+    mesh — the ZeRO/megatron invariant that makes 90B params fit."""
+    cfg = configs.get(arch)
+    schema = param_schema(cfg)
+    flat: list = []
+    _map_schema(lambda path, e: flat.append((path, e)), schema)
+    for path, e in flat:
+        n = 1
+        for d in e.shape:
+            n *= d
+        if n * 2 < 64 * 2**20:
+            continue
+        spec = SH.spec_for(e.shape, e.axes, SINGLE)
+        assert any(part is not None for part in tuple(spec)), (
+            f"{arch} {'/'.join(path)}: {e.shape} replicated"
+        )
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+@pytest.mark.parametrize("mesh", [SINGLE, MULTI], ids=["single", "multi"])
+def test_cache_specs_divisible(arch, shape_name, mesh):
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    if shape_skip_reason(cfg, shape):
+        pytest.skip("documented skip")
+    from repro.models.cache import cache_structure
+
+    struct = cache_structure(cfg, shape.global_batch, shape.seq_len)
+    specs = SH.cache_specs(cfg, mesh, shape.global_batch, shape.seq_len)
+
+    def check(s, spec):
+        for dim, part in zip(s.shape, tuple(spec)):
+            if part is None:
+                continue
+            axes = part if isinstance(part, tuple) else (part,)
+            prod = 1
+            for a in axes:
+                prod *= mesh.shape[a]
+            assert dim % prod == 0, f"{arch} {shape_name}: {s.shape} vs {spec}"
+
+    import jax
+
+    jax.tree.map(
+        check, struct, specs, is_leaf=lambda x: isinstance(x, P) or hasattr(x, "shape")
+    )
+
+
+def test_big_cache_is_distributed():
+    """decode_32k KV caches above 1 GiB must shard somewhere."""
+    for arch in ARCHS:
+        cfg = configs.get(arch)
+        if shape_skip_reason(cfg, SHAPES["decode_32k"]):
+            continue
+        from repro.models.cache import cache_structure
+
+        struct = cache_structure(cfg, 128, 32_768)
+        specs = SH.cache_specs(cfg, SINGLE, 128, 32_768)
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            k = struct["self"]["k"]
+            n_bytes = 2
+            n = n_bytes
+            for d in k.shape:
+                n *= d
+            if n > 2**30:
+                spec = specs["self"]["k"]
+                assert any(p is not None for p in tuple(spec)), arch
+
+
+def test_divisible_batch_axes():
+    assert SH.divisible_batch_axes(SINGLE, 256) == ("data",)
+    assert SH.divisible_batch_axes(SINGLE, 1) == ()
+    assert SH.divisible_batch_axes(MULTI, 256) == ("pod", "data")
+    assert SH.divisible_batch_axes(MULTI, 2) == ("pod",)
+
+
+def test_optimizer_state_specs_structure():
+    import jax
+    import jax.numpy as jnp
+
+    import repro.optim as O
+
+    params = {"w": jnp.zeros((4, 4)), "b": jnp.zeros((4,))}
+    pspecs = {"w": P("data", "model"), "b": P()}
+    opt = O.adamw(1e-3, weight_decay=0.1, max_grad_norm=1.0)
+    state = jax.eval_shape(opt.init, params)
+    specs = SH.optimizer_state_specs(state, pspecs)
+    # adam moments inherit param specs
+    leaves = jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)
+    )
+    assert P("data", "model") in leaves
+
+    dopt = O.delayed_gradient(opt, 3)
+    dstate = jax.eval_shape(dopt.init, params)
+    dspecs = SH.optimizer_state_specs(dstate, pspecs)
+    ring_spec = dspecs.ring["w"]
+    assert tuple(ring_spec) == (None, "data", "model")

@@ -1,0 +1,87 @@
+"""Event-driven cluster simulator + closed-form speedup models (Eq. 13)."""
+import numpy as np
+import pytest
+
+from repro.core.baselines import (
+    max_workers_bound,
+    speedup_model_async,
+    speedup_model_dimboost,
+    speedup_model_sync,
+)
+from repro.core.simulator import ClusterSpec, simulate_async, simulate_sync
+
+
+def _spec(workers, **kw):
+    base = dict(t_build=1.0, t_comm=0.02, t_server=0.01, seed=3)
+    base.update(kw)
+    return ClusterSpec(n_workers=workers, **base)
+
+
+def test_async_makespan_scales_with_workers():
+    m1 = simulate_async(_spec(1), 200).makespan
+    m8 = simulate_async(_spec(8), 200).makespan
+    m32 = simulate_async(_spec(32), 200).makespan
+    assert m8 < m1 / 4          # near-linear early
+    assert m32 < m8             # still improving
+
+
+def test_async_staleness_tracks_worker_count():
+    for w in (2, 8, 24):
+        res = simulate_async(_spec(w), 400)
+        assert w * 0.3 < res.mean_staleness < w * 2.5, (w, res.mean_staleness)
+        assert res.max_staleness >= res.mean_staleness
+
+
+def test_async_schedule_is_valid():
+    res = simulate_async(_spec(8), 300)
+    j = np.arange(300)
+    assert (res.schedule <= j).all()        # k(j) <= j
+    # locally jittered (network noise) but globally advancing
+    assert res.schedule[-50:].mean() > res.schedule[:50].mean() + 100
+    assert res.schedule[-1] >= 300 - 8 * 3  # tail staleness bounded ~W
+
+
+def test_server_saturation_limits_speedup():
+    """Eq. 13: beyond T(build)/T(comm+server) extra workers stop helping.
+    In the simulator the serialized resource is the server (worker-side
+    comm overlaps), so the bound uses t_comm=0 + the server time."""
+    bound = max_workers_bound(t_build=1.0, t_comm=0.0, t_server=0.1)
+    m_at = simulate_async(_spec(int(bound), t_comm=0.0, t_server=0.1), 300).makespan
+    m_over = simulate_async(
+        _spec(int(bound * 4), t_comm=0.0, t_server=0.1), 300
+    ).makespan
+    assert m_over > m_at * 0.5  # no 4x gain from 4x workers past the bound
+
+
+def test_sync_slower_than_async_at_scale():
+    for w in (8, 32):
+        sync = simulate_sync(_spec(w), 100)
+        async_ = simulate_async(_spec(w), 100).makespan
+        assert async_ < sync, f"W={w}"
+
+
+def test_sync_straggler_penalty_grows():
+    """More heterogeneity => worse fork-join makespan (the paper's core
+    argument for asynchrony)."""
+    calm = simulate_sync(_spec(16, speed_spread=0.05), 100)
+    rough = simulate_sync(_spec(16, speed_spread=0.6), 100)
+    assert rough > calm
+
+
+def test_speedup_models_shapes():
+    w = np.array([1, 2, 4, 8, 16, 32])
+    a = speedup_model_async(w, 1.0, 0.02, 0.01)
+    s = speedup_model_sync(w, 1.0, 0.02, 0.01)
+    d = speedup_model_dimboost(w, 1.0, 0.02, 0.01)
+    assert a[0] == pytest.approx(1.0, rel=0.1)
+    assert (np.diff(a) >= -1e-9).all()          # monotone
+    assert a[-1] > s[-1] and a[-1] > d[-1]      # async wins at 32 (paper Fig. 10)
+    # DimBoost's centralized comm makes it degrade hardest at scale
+    assert d[-1] < s[-1] * 1.5
+
+
+def test_dimboost_linear_comm_penalty():
+    w = np.array([32])
+    d_fast_net = speedup_model_dimboost(w, 1.0, 0.001, 0.01)
+    d_slow_net = speedup_model_dimboost(w, 1.0, 0.05, 0.01)
+    assert d_fast_net > d_slow_net * 2
