@@ -1,10 +1,13 @@
 """Beyond the zoo: the paper's own GBDT training step on the production
-mesh — lower + compile ``train_async_scan`` with the dataset sharded over
-'data' (samples) x 'model' (features), and report its roofline terms.
+mesh — lower + compile the PS engine's scan form with the dataset sharded
+over 'data' (samples) x 'model' (features), and report its roofline terms
+through the shared harness (``benchmarks.roofline_common``).
 
-This is the distributed form of the DimBoost comparison: histogram psum
-over data shards replaces the centralized parameter-server aggregation
-(the all-reduce happens on ICI instead of through one server NIC).
+The tree build inside the step is the sharded-histogram path
+(``repro.ps.sharded``): every 'data' shard runs the histogram kernel on
+its local samples and the level histograms merge with a psum across the
+axis — the distributed form of the DimBoost comparison, with the
+parameter-server aggregation on ICI instead of one server NIC.
 """
 from __future__ import annotations
 
@@ -15,31 +18,31 @@ import sys
 import textwrap
 
 from benchmarks.common import save
+from benchmarks.roofline_common import roofline_terms
 
 _CODE = textwrap.dedent(
     """
     import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=256"
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n_dev}"
     import json
     import jax
     import jax.numpy as jnp
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding
 
-    from repro.core.async_sgbdt import train_async_scan, worker_round_robin
     from repro.core.sgbdt import SGBDTConfig
+    from repro.ps import Trainer
+    from repro.ps.schedules import max_staleness, worker_round_robin
+    from repro.sharding import gbdt_data_specs
     from repro.trees.binning import BinnedData
     from repro.trees.learner import LearnerConfig
     from repro.launch.hlo_analysis import analyze_hlo
-    from repro.launch.mesh import (
-        make_production_mesh, PEAK_FLOPS_BF16, HBM_BW, ICI_BW,
-    )
+    from repro.launch.mesh import make_production_mesh
 
-    mesh = make_production_mesh()
-    NS = lambda *spec: NamedSharding(mesh, P(*spec))
-    N, F, T = 262_144, 2_048, 64
+    mesh = jax.make_mesh(({mesh_shape}), ("data", "model"))
+    N, F, T = {N}, {F}, {T}
     cfg = SGBDTConfig(
         n_trees=T, step_length=0.1, sampling_rate=0.8,
-        learner=LearnerConfig(depth=7, n_bins=64, backend="ref"),
+        learner=LearnerConfig(depth={depth}, n_bins=64, backend="ref"),
     )
     data_abs = BinnedData(
         bins=jax.ShapeDtypeStruct((N, F), jnp.int32),
@@ -48,16 +51,19 @@ _CODE = textwrap.dedent(
         multiplicity=jax.ShapeDtypeStruct((N,), jnp.float32),
         n_bins=64,
     )
-    data_sh = BinnedData(
-        bins=NS("data", "model"),
-        bin_edges=NS("model"),
-        labels=NS("data"),
-        multiplicity=NS("data"),
-        n_bins=NS(),
+    specs = gbdt_data_specs(mesh, shard_features=True)
+    data_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: not isinstance(x, BinnedData),
     )
+
+    trainer = Trainer(cfg, mesh=mesh)       # sharded shard_map+psum builds
+    # Lower the W-worker round-robin steady state: ring carries W versions.
+    W = {W}
+    ring_size = max_staleness(worker_round_robin(T, W)) + 1
     fn = jax.jit(
-        lambda d, s, r: train_async_scan(cfg, d, s, r, ring_size=32),
-        in_shardings=(data_sh, NS(), NS()),
+        lambda d, s, r: trainer.scan_with(d, s, r, ring_size),
+        in_shardings=(data_sh, None, None),
     )
     lowered = fn.lower(
         data_abs,
@@ -67,41 +73,43 @@ _CODE = textwrap.dedent(
     compiled = lowered.compile()
     st = analyze_hlo(compiled.as_text())
     mem = compiled.memory_analysis()
-    out = {
+    out = {{
         "n_samples": N, "n_features": F, "n_trees": T,
         "dot_flops": st.dot_flops,
         "hbm_bytes": st.hbm_bytes,
         "collective_bytes": st.total_collective_bytes,
-        "collective_by_kind": {k: v for k, v in st.collective_bytes.items()},
-        "compute_s": st.dot_flops / PEAK_FLOPS_BF16,
-        "memory_s": st.hbm_bytes / HBM_BW,
-        "collective_s": st.total_collective_bytes / ICI_BW,
+        "collective_by_kind": {{k: v for k, v in st.collective_bytes.items()}},
         "temp_gib": mem.temp_size_in_bytes / 2**30,
-    }
+    }}
     print("GBDT_ROOFLINE_JSON=" + json.dumps(out))
     """
 )
 
 
 def run(quick: bool = True) -> dict:
+    shape = dict(
+        n_dev=16, mesh_shape="8, 2", N=32_768, F=256, T=8, depth=5, W=4,
+    ) if quick else dict(
+        n_dev=256, mesh_shape="16, 16", N=262_144, F=2_048, T=64, depth=7, W=32,
+    )
     proc = subprocess.run(
-        [sys.executable, "-c", _CODE],
+        [sys.executable, "-c", _CODE.format(**shape)],
         capture_output=True, text=True, timeout=1400,
         env={**os.environ, "PYTHONPATH": "src"},
     )
     for line in proc.stdout.splitlines():
         if line.startswith("GBDT_ROOFLINE_JSON="):
             payload = json.loads(line.split("=", 1)[1])
+            payload.update(roofline_terms(
+                payload["dot_flops"], payload["hbm_bytes"],
+                payload["collective_bytes"],
+            ))
             save("gbdt_roofline", payload)
-            dom = max(
-                ("compute", payload["compute_s"]),
-                ("memory", payload["memory_s"]),
-                ("collective", payload["collective_s"]),
-                key=lambda kv: kv[1],
-            )[0]
-            print(f"  GBDT step on 16x16: compute {payload['compute_s']:.3e}s "
+            print(f"  GBDT sharded-histogram step on {shape['mesh_shape']}: "
+                  f"compute {payload['compute_s']:.3e}s "
                   f"memory {payload['memory_s']:.3e}s "
-                  f"collective {payload['collective_s']:.3e}s -> {dom}-bound")
+                  f"collective {payload['collective_s']:.3e}s "
+                  f"-> {payload['dominant']}-bound")
             return payload
     print("  gbdt roofline failed:", proc.stderr[-800:])
     return {"error": proc.stderr[-800:]}

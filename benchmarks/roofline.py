@@ -1,12 +1,10 @@
 """Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
 
-Per (arch x shape x mesh):
-    compute term    = per-device loop-aware dot FLOPs / 197 TF/s (bf16)
-    memory term     = per-device HBM-traffic proxy    / 819 GB/s
-    collective term = per-device collective bytes     / 50 GB/s per link
-plus MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D (fwd), and the
-utilization ratio MODEL_FLOPS / (dot_flops * n_devices) that exposes remat
-and redundant-compute waste. The dominant term is the bottleneck the perf
+Per (arch x shape x mesh): the three-term model from
+``benchmarks.roofline_common`` plus MODEL_FLOPS = 6*N_active*D (train) or
+2*N_active*D (fwd), and the utilization ratio
+MODEL_FLOPS / (dot_flops * n_devices) that exposes remat and
+redundant-compute waste. The dominant term is the bottleneck the perf
 loop iterates on.
 """
 from __future__ import annotations
@@ -14,44 +12,25 @@ from __future__ import annotations
 import json
 import pathlib
 
-from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from benchmarks.roofline_common import roofline_terms
 
 DRYRUN_DIR = pathlib.Path("experiments/dryrun")
 
 
 def terms(rec: dict) -> dict:
     hlo = rec["hlo"]
-    t_compute = hlo["dot_flops"] / PEAK_FLOPS_BF16
-    t_memory = hlo["hbm_bytes"] / HBM_BW
-    t_coll = hlo["total_collective_bytes"] / ICI_BW
-    dominant = max(
-        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
-        key=lambda kv: kv[1],
-    )[0]
+    out = roofline_terms(
+        hlo["dot_flops"], hlo["hbm_bytes"], hlo["total_collective_bytes"]
+    )
     n_dev = rec["n_devices"]
-    useful = rec["model_flops"] / max(hlo["dot_flops"] * n_dev, 1.0)
-    return {
-        "compute_s": t_compute,
-        "memory_s": t_memory,
-        "collective_s": t_coll,
-        "dominant": dominant,
-        "model_flops": rec["model_flops"],
-        "useful_flops_ratio": useful,
-        "hbm_gib_per_dev": (
+    out.update(
+        model_flops=rec["model_flops"],
+        useful_flops_ratio=rec["model_flops"] / max(hlo["dot_flops"] * n_dev, 1.0),
+        hbm_gib_per_dev=(
             rec["memory"]["argument_bytes"] + rec["memory"]["temp_bytes"]
         ) / 2**30,
-    }
-
-
-NOTES = {
-    "compute": "compute-bound: raise MXU utilization (tile sizes, fewer "
-               "remat recomputes, fuse small dots)",
-    "memory": "HBM-bound: fuse elementwise chains, widen blocks, cut "
-              "activation dtype to bf16 end-to-end",
-    "collective": "collective-bound: hoist FSDP all-gathers out of the "
-                  "microbatch loop / cache gathered params, or trade FSDP "
-                  "for pure TP on the small-param tensors",
-}
+    )
+    return out
 
 
 def load(mesh: str = "single") -> list[dict]:
@@ -64,8 +43,7 @@ def load(mesh: str = "single") -> list[dict]:
                          "reason": rec.get("reason", rec.get("error", ""))})
             continue
         row = {"arch": rec["arch"], "shape": rec["shape"], "status": "ok"}
-        row.update(terms(rec))
-        row["note"] = NOTES[row["dominant"]]
+        row.update(terms(rec))            # includes the bottleneck 'note'
         rows.append(row)
     return rows
 

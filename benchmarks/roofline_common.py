@@ -1,0 +1,43 @@
+"""Shared roofline harness (EXPERIMENTS.md §Roofline).
+
+One place for the three-term model both roofline benchmarks use:
+    compute term    = per-device loop-aware dot FLOPs / 197 TF/s (bf16)
+    memory term     = per-device HBM-traffic proxy    / 819 GB/s
+    collective term = per-device collective bytes     / 50 GB/s per link
+plus the dominant-term bottleneck note that the perf loop iterates on.
+``roofline.py`` applies it to the dry-run artifacts of the model zoo;
+``gbdt_roofline.py`` applies it to the PS engine's sharded GBDT step.
+"""
+from __future__ import annotations
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+NOTES = {
+    "compute": "compute-bound: raise MXU utilization (tile sizes, fewer "
+               "remat recomputes, fuse small dots)",
+    "memory": "HBM-bound: fuse elementwise chains, widen blocks, cut "
+              "activation dtype to bf16 end-to-end",
+    "collective": "collective-bound: hoist FSDP all-gathers out of the "
+                  "microbatch loop / cache gathered params, or trade FSDP "
+                  "for pure TP on the small-param tensors",
+}
+
+
+def roofline_terms(
+    dot_flops: float, hbm_bytes: float, collective_bytes: float
+) -> dict:
+    """The three per-device time terms + which one dominates."""
+    t_compute = dot_flops / PEAK_FLOPS_BF16
+    t_memory = hbm_bytes / HBM_BW
+    t_coll = collective_bytes / ICI_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_coll,
+        "dominant": dominant,
+        "note": NOTES[dominant],
+    }

@@ -1,6 +1,6 @@
 """End-to-end asynch-SGBDT training run — the paper's efficiency-experiment
-pipeline: realistic delay schedules from the cluster simulator, held-out
-evaluation, and checkpointing.
+pipeline on the parameter-server engine: realistic delay schedules from the
+cluster simulator, held-out evaluation, and checkpointing.
 
     PYTHONPATH=src python examples/train_asynch_sgbdt.py \
         [--trees 200] [--workers 16] [--rate 0.8] [--full]
@@ -13,9 +13,9 @@ import numpy as np
 
 import repro.data as D
 from repro.checkpoint import CheckpointManager
-from repro.core.async_sgbdt import max_staleness, train_async
 from repro.core.sgbdt import SGBDTConfig, train_loss
 from repro.core.simulator import ClusterSpec, simulate_async
+from repro.ps import Trainer
 from repro.trees import apply_bins, forest_predict
 from repro.trees.learner import LearnerConfig
 from repro.trees.losses import sigmoid2
@@ -72,8 +72,8 @@ def main():
         mgr.maybe_save(j, st._asdict())
 
     t0 = time.time()
-    state = train_async(
-        cfg, tr, sim.schedule, seed=0, eval_every=25, eval_fn=on_eval
+    state = Trainer(cfg).train(
+        tr, sim.schedule, seed=0, eval_every=25, eval_fn=on_eval
     )
     print(f"trained {args.trees} trees in {time.time()-t0:.1f}s "
           f"(CPU; schedule from the simulated cluster)")

@@ -1,6 +1,9 @@
 """The paper's contribution: asynch-SGBDT (Algorithm 3) and its baselines.
 
-- ``sgbdt``: serial stochastic GBDT (the tau = 0 special case) + shared state.
+- ``sgbdt``: config/state definitions + the serial trainer (the tau = 0
+  special case). All trainers here are thin shims over the parameter-server
+  execution engine in ``repro.ps`` — one shared round body, loop and scan
+  forms, optional shard_map data-parallel builds.
 - ``async_sgbdt``: the asynchronous trainer — delayed targets F^{k(j)} via
   delay schedules, exactly the object Proposition 1 reasons about. Includes a
   fully jit/scan form that doubles as the distributed ``gbdt_train_step``.
@@ -13,7 +16,9 @@
 from repro.core.sgbdt import SGBDTConfig, TrainState, init_state, train_serial, sgbdt_round
 from repro.core.async_sgbdt import (
     constant_delay,
+    max_staleness,
     train_async,
+    train_async_scan,
     worker_round_robin,
 )
 from repro.core.simulator import ClusterSpec, simulate_async, simulate_sync
@@ -30,8 +35,10 @@ __all__ = [
     "train_serial",
     "sgbdt_round",
     "constant_delay",
+    "max_staleness",
     "worker_round_robin",
     "train_async",
+    "train_async_scan",
     "ClusterSpec",
     "simulate_async",
     "simulate_sync",

@@ -1,79 +1,37 @@
-"""Asynch-SGBDT: Algorithm 3 with explicit delay schedules.
+"""Asynch-SGBDT: Algorithm 3 with explicit delay schedules (legacy names).
 
 On real hardware asynchrony arises from worker timing; algorithmically its
 entire effect is *which* server version each pushed tree was built from —
 the k(j) map with staleness tau >= j - k(j). The theory (Prop. 1) is stated
-directly in terms of k(j), so we execute k(j) exactly: schedules come either
-from closed forms (round-robin steady state, constant tau) or from the
-event-driven cluster simulator (heterogeneous workers, network jitter).
+directly in terms of k(j), so we execute k(j) exactly.
 
-Two executions of the same semantics:
+This module is the stable public surface; the execution engine lives in
+``repro.ps``. Both entry points run the SAME shared round body
+(``repro.ps.engine.round_body``) under a ``Trainer``:
+
   * ``train_async`` — Python loop, per-round eval hooks (experiments).
-  * ``train_async_scan`` — single ``lax.scan`` program; this is the form the
-    multi-pod dry-run lowers (dataset sharded over 'data', features over
-    'model'), giving the paper's GBDT a roofline table alongside the zoo.
+  * ``train_async_scan`` — single ``lax.scan`` program; this is the form
+    the multi-pod dry-run lowers (dataset sharded over 'data', features
+    over 'model'), giving the paper's GBDT a roofline table alongside the
+    zoo.
+
+The schedule closed forms (``constant_delay``, ``worker_round_robin``,
+``max_staleness``) are re-exported from ``repro.ps.schedules``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sgbdt import SGBDTConfig, TrainState, init_state
-from repro.data.sampling import bernoulli_weights
+from repro.core.sgbdt import SGBDTConfig, TrainState
+from repro.ps.schedules import (  # noqa: F401  (public re-exports)
+    constant_delay,
+    max_staleness,
+    worker_round_robin,
+)
 from repro.trees.binning import BinnedData
-from repro.trees.forest import forest_push
-from repro.trees.learner import build_tree
-from repro.trees.tree import apply_tree
-
-
-# ---------------------------------------------------------------- schedules
-def constant_delay(n_trees: int, tau: int) -> np.ndarray:
-    """k(j) = max(0, j - tau): every tree is exactly tau versions stale."""
-    j = np.arange(n_trees)
-    return np.maximum(0, j - tau).astype(np.int32)
-
-
-def worker_round_robin(n_trees: int, n_workers: int) -> np.ndarray:
-    """Steady-state schedule of W homogeneous workers (threads-as-workers).
-
-    A worker whose push became update j immediately pulls F^{j+1}; its next
-    push lands W updates later => k(j + W) = j + 1, i.e. k(j) = j - W + 1.
-    W = 1 is exactly the serial trainer (k(j) = j, zero staleness). The
-    first W trees are all built from F^0 (all workers pulled at launch).
-    """
-    j = np.arange(n_trees)
-    return np.maximum(0, j - n_workers + 1).astype(np.int32)
-
-
-def max_staleness(schedule: np.ndarray) -> int:
-    return int(np.max(np.arange(len(schedule)) - schedule))
-
-
-# ------------------------------------------------------------------ trainers
-def _round(cfg, data, forest, f_live, f_target, rng):
-    """Shared round body (traced inside loop or scan)."""
-    r_sample, r_feat = jax.random.split(rng)
-    m_prime, _ = bernoulli_weights(r_sample, cfg.sampling_rate, data.multiplicity)
-    g, h = cfg.grad_hess(data.labels, f_target)
-    hess_w = m_prime * h if cfg.step_kind == "newton" else m_prime
-    tree = build_tree(cfg.learner, data.bins, m_prime * g, hess_w, r_feat)
-    delta = apply_tree(tree, data.bins)
-    return (
-        forest_push(forest, tree, jnp.float32(cfg.step_length)),
-        f_live + cfg.step_length * delta,
-    )
-
-
-@functools.partial(jax.jit, static_argnames=("cfg", "ring_size"))
-def _async_step(cfg, data, forest, f, ring, j, k_j, rng, ring_size):
-    f_target = ring[k_j % ring_size]
-    forest, f = _round(cfg, data, forest, f, f_target, rng)
-    ring = ring.at[(j + 1) % ring_size].set(f)
-    return forest, f, ring
 
 
 def train_async(
@@ -85,24 +43,13 @@ def train_async(
     eval_fn: Callable[[TrainState, int], None] | None = None,
 ) -> TrainState:
     """Algorithm 3 under an explicit delay schedule (Python-loop form)."""
-    assert len(schedule) == cfg.n_trees
-    ring_size = max_staleness(schedule) + 1
-    state = init_state(cfg, data)
-    ring = jnp.broadcast_to(state.f, (ring_size, state.f.shape[0])).copy()
-    keys = jax.random.split(jax.random.PRNGKey(seed), cfg.n_trees)
-    forest, f = state.forest, state.f
-    for j in range(cfg.n_trees):
-        forest, f, ring = _async_step(
-            cfg, data, forest, f, ring,
-            jnp.asarray(j, jnp.int32), jnp.asarray(int(schedule[j]), jnp.int32),
-            keys[j], ring_size,
-        )
-        if eval_fn is not None and eval_every and (j + 1) % eval_every == 0:
-            eval_fn(TrainState(forest, f, jnp.asarray(j + 1, jnp.int32)), j + 1)
-    return TrainState(forest=forest, f=f, step=jnp.asarray(cfg.n_trees, jnp.int32))
+    from repro.ps.engine import train
+
+    return train(
+        cfg, data, schedule, seed=seed, eval_every=eval_every, eval_fn=eval_fn
+    )
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "ring_size"))
 def train_async_scan(
     cfg: SGBDTConfig,
     data: BinnedData,
@@ -111,23 +58,6 @@ def train_async_scan(
     ring_size: int,
 ) -> tuple[TrainState, jax.Array]:
     """Whole training run as one scan; returns per-round train loss too."""
-    state = init_state(cfg, data)
-    ring = jnp.broadcast_to(state.f, (ring_size, state.f.shape[0]))
+    from repro.ps.engine import get_trainer
 
-    def body(carry, xs):
-        forest, f, ring = carry
-        j, k_j, rng = xs
-        f_target = ring[k_j % ring_size]
-        forest, f = _round(cfg, data, forest, f, f_target, rng)
-        ring = jax.lax.dynamic_update_index_in_dim(
-            ring, f, (j + 1) % ring_size, 0
-        )
-        loss = cfg.loss_fn(data.labels, f, data.multiplicity)
-        return (forest, f, ring), loss
-
-    (forest, f, _), losses = jax.lax.scan(
-        body,
-        (state.forest, state.f, ring),
-        (jnp.arange(cfg.n_trees, dtype=jnp.int32), schedule, rngs),
-    )
-    return TrainState(forest, f, jnp.asarray(cfg.n_trees, jnp.int32)), losses
+    return get_trainer(cfg).scan_with(data, schedule, rngs, ring_size)

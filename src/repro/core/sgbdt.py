@@ -14,10 +14,9 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.data.sampling import bernoulli_weights
 from repro.trees.binning import BinnedData
-from repro.trees.forest import Forest, empty_forest, forest_push
-from repro.trees.learner import LearnerConfig, build_tree
+from repro.trees.forest import Forest, empty_forest
+from repro.trees.learner import LearnerConfig
 from repro.trees.losses import LOSSES
 
 
@@ -77,27 +76,16 @@ def sgbdt_round(
 ) -> TrainState:
     """One boosting round: sample Q -> build target -> build tree -> fold in.
 
-    Splitting ``f_target`` from ``state.f`` is what makes this routine shared
-    between the serial and asynchronous trainers: the tree is built against
-    (possibly stale) ``f_target``, but folded into the live server state.
+    Thin shim over ``repro.ps.engine.round_body`` — the single shared round
+    body of every trainer. Splitting ``f_target`` from ``state.f`` is what
+    makes the body shared between the serial and asynchronous trainers: the
+    tree is built against (possibly stale) ``f_target``, but folded into
+    the live server state.
     """
-    r_sample, r_feat = jax.random.split(rng)
-    m_prime, _ = bernoulli_weights(r_sample, cfg.sampling_rate, data.multiplicity)
-    g, h = cfg.grad_hess(data.labels, f_target)
-    # Gradient step (paper: "we use gradient step"): fit m'_i * l'_i with
-    # weight m'_i; leaf value is the (regularized) mean residual. Newton
-    # step (xgboost): weight by the sampled hessian instead.
-    hess_w = m_prime * h if cfg.step_kind == "newton" else m_prime
-    tree = build_tree(cfg.learner, data.bins, m_prime * g, hess_w, r_feat)
+    from repro.ps.engine import round_body  # local import to avoid cycle
 
-    from repro.trees.tree import apply_tree  # local import to avoid cycle
-
-    delta = apply_tree(tree, data.bins)
-    return TrainState(
-        forest=forest_push(state.forest, tree, jnp.float32(cfg.step_length)),
-        f=state.f + cfg.step_length * delta,
-        step=state.step + 1,
-    )
+    forest, f = round_body(cfg, data, state.forest, state.f, f_target, rng)
+    return TrainState(forest=forest, f=f, step=state.step + 1)
 
 
 def train_serial(
@@ -107,14 +95,17 @@ def train_serial(
     eval_every: int = 0,
     eval_fn: Callable[[TrainState, int], None] | None = None,
 ) -> TrainState:
-    """The paper's serial stochastic GBDT (Fig. 3, 'stochastic GBDT')."""
-    state = init_state(cfg, data)
-    keys = jax.random.split(jax.random.PRNGKey(seed), cfg.n_trees)
-    for j in range(cfg.n_trees):
-        state = sgbdt_round(cfg, data, state, state.f, keys[j])
-        if eval_fn is not None and eval_every and (j + 1) % eval_every == 0:
-            eval_fn(state, j + 1)
-    return state
+    """The paper's serial stochastic GBDT (Fig. 3, 'stochastic GBDT').
+
+    Executed by the PS engine under the zero-staleness schedule: serial
+    training IS ``("round_robin", 1)`` (k(j) = j), not a separate loop.
+    """
+    from repro.ps.engine import train  # local import to avoid cycle
+
+    return train(
+        cfg, data, ("round_robin", 1),
+        seed=seed, eval_every=eval_every, eval_fn=eval_fn,
+    )
 
 
 def train_loss(cfg: SGBDTConfig, data: BinnedData, state: TrainState) -> jax.Array:

@@ -41,26 +41,37 @@ def build_histogram(
     backend: str = "auto",
     sample_block: int = 512,
     feature_block: int = 8,
+    axis_name: str | None = None,
 ) -> jax.Array:
-    """(2, n_nodes, F, n_bins) grad/hess histograms. See kernels/histogram.py."""
+    """(2, n_nodes, F, n_bins) grad/hess histograms. See kernels/histogram.py.
+
+    ``axis_name``: when running data-parallel under shard_map (samples
+    sharded over a mesh axis), each shard builds its local histogram with
+    the kernel and the results merge with a psum across the axis — every
+    cell is a sum over disjoint sample subsets, so partial sums compose
+    exactly (the parameter-server aggregation as an all-reduce).
+    """
     if backend == "auto":
         backend = _default_backend()
     if backend == "ref":
-        return _ref.histogram_ref(bins, node_ids, grad, hess, n_nodes, n_bins)
-    if backend != "pallas":
+        out = _ref.histogram_ref(bins, node_ids, grad, hess, n_nodes, n_bins)
+    elif backend == "pallas":
+        interpret = jax.default_backend() != "tpu"
+        n_feat = bins.shape[1]
+        fb = min(feature_block, n_feat)
+        binsp = _pad_to(_pad_to(bins, sample_block, 0, 0), fb, 1, 0)
+        nodep = _pad_to(node_ids, sample_block, 0, -1)  # padded samples inactive
+        gradp = _pad_to(grad, sample_block, 0, 0.0)
+        hessp = _pad_to(hess, sample_block, 0, 0.0)
+        out = histogram_pallas(
+            binsp, nodep, gradp, hessp, n_nodes, n_bins,
+            sample_block=sample_block, feature_block=fb, interpret=interpret,
+        )[:, :, :n_feat, :]
+    else:
         raise ValueError(f"unknown backend {backend!r}")
-    interpret = jax.default_backend() != "tpu"
-    n_feat = bins.shape[1]
-    fb = min(feature_block, n_feat)
-    binsp = _pad_to(_pad_to(bins, sample_block, 0, 0), fb, 1, 0)
-    nodep = _pad_to(node_ids, sample_block, 0, -1)  # padded samples inactive
-    gradp = _pad_to(grad, sample_block, 0, 0.0)
-    hessp = _pad_to(hess, sample_block, 0, 0.0)
-    out = histogram_pallas(
-        binsp, nodep, gradp, hessp, n_nodes, n_bins,
-        sample_block=sample_block, feature_block=fb, interpret=interpret,
-    )
-    return out[:, :, :n_feat, :]
+    if axis_name is not None:
+        out = jax.lax.psum(out, axis_name)
+    return out
 
 
 def split_gain(

@@ -191,8 +191,17 @@ def analyze_hlo(hlo: str) -> HloStats:
                 cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ln)
                 ops_m = re.search(r"dot\(([^)]*)\)", ln)
                 if cm and ops_m:
-                    lhs_name = ops_m.group(1).split(",")[0].strip().lstrip("%")
-                    lhs_dims = _shape_dims(shape_of.get(lhs_name, ""))
+                    args = ops_m.group(1)
+                    # Depending on the XLA version, operands print either as
+                    # bare %names or with inline shape annotations
+                    # ("f32[128,256]{1,0} %arg"); the first inline shape IS
+                    # the lhs, otherwise resolve the name in the symbol table.
+                    sm = _SHAPE_RE.search(args)
+                    if sm:
+                        lhs_dims = [int(d) for d in sm.group(2).split(",") if d]
+                    else:
+                        lhs_name = args.split(",")[0].strip().lstrip("%")
+                        lhs_dims = _shape_dims(shape_of.get(lhs_name, ""))
                     for ci in cm.group(1).split(","):
                         if ci and int(ci) < len(lhs_dims):
                             contr *= lhs_dims[int(ci)]
@@ -216,9 +225,13 @@ def analyze_hlo(hlo: str) -> HloStats:
                 b = _shape_bytes(shape_str)
                 ops_m = re.search(rf"{opcode}\(([^)]*)\)", ln)
                 if ops_m:
-                    for operand in ops_m.group(1).split(","):
-                        operand = operand.strip().lstrip("%")
-                        b += _shape_bytes(shape_of.get(operand, ""))
+                    args = ops_m.group(1)
+                    if _SHAPE_RE.search(args):   # inline operand shapes
+                        b += _shape_bytes(args)
+                    else:                        # bare %names: symbol table
+                        for operand in args.split(","):
+                            operand = operand.strip().lstrip("%")
+                            b += _shape_bytes(shape_of.get(operand, ""))
                 hbm += b * k
 
     return HloStats(

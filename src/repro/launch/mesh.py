@@ -6,20 +6,25 @@ from __future__ import annotations
 import jax
 
 
+def _mesh(shape, axes) -> jax.sharding.Mesh:
+    """jax.make_mesh across versions: ``axis_types`` (and AxisType itself)
+    only exist on newer jax; Auto is the default there anyway."""
+    if hasattr(jax.sharding, "AxisType"):
+        types = (jax.sharding.AxisType.Auto,) * len(axes)
+        return jax.make_mesh(shape, axes, axis_types=types)
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """16x16 = 256 chips per pod; 2x16x16 = 512 across two pods."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=types)
+    return _mesh(shape, axes)
 
 
 def make_host_mesh() -> jax.sharding.Mesh:
     """Degenerate 1x1 mesh over the local device — smoke tests / CPU runs."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _mesh((1, 1), ("data", "model"))
 
 
 # TPU v5e hardware constants used by the roofline analysis (per chip).

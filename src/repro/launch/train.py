@@ -7,6 +7,12 @@ device (reduced configs) or a production mesh (full configs on real pods).
 ``--delay`` wraps the optimizer in the paper's DelayedGradient staleness
 mechanism; ``--sample`` draws Bernoulli importance weights per batch — the
 two halves of asynch-SGBDT applied to NN training.
+
+``--arch gbdt`` instead drives the paper's own model through the
+parameter-server engine (``repro.ps``):
+
+    PYTHONPATH=src python -m repro.launch.train --arch gbdt \
+        --steps 200 --workers 16 [--sample 0.8] [--scan]
 """
 from __future__ import annotations
 
@@ -52,6 +58,42 @@ def synthetic_batches(cfg, batch: int, seq: int, steps: int, seed: int = 0):
         yield batch_d
 
 
+def run_gbdt(args) -> None:
+    """Asynch-SGBDT on the PS engine: round-robin W workers, loop or scan."""
+    import repro.data as D
+    from repro.core.sgbdt import SGBDTConfig, train_loss
+    from repro.ps import Trainer
+    from repro.trees.learner import LearnerConfig
+
+    data = D.make_sparse_classification(4_000, 1_000, 20, seed=args.seed)
+    cfg = SGBDTConfig(
+        n_trees=args.steps,
+        step_length=0.15,
+        sampling_rate=args.sample or 0.8,
+        learner=LearnerConfig(depth=6, n_bins=64, feature_fraction=0.8),
+    )
+    trainer = Trainer(cfg)
+    schedule = ("round_robin", args.workers)
+    print(f"gbdt: {args.steps} trees, {args.workers} PS workers "
+          f"({'scan' if args.scan else 'loop'} form)")
+    t0 = time.time()
+    if args.scan:
+        state, losses = trainer.train_scan(data, schedule, seed=args.seed)
+        print(f"loss {float(losses[0]):.4f} -> {float(losses[-1]):.4f}")
+    else:
+        def on_eval(st, j):
+            print(f"  tree {j:4d}: train loss "
+                  f"{float(train_loss(cfg, data, st)):.4f}")
+
+        state = trainer.train(
+            data, schedule, seed=args.seed,
+            eval_every=max(args.log_every, 1) * 5, eval_fn=on_eval,
+        )
+        print(f"final loss {float(train_loss(cfg, data, state)):.4f}")
+    print(f"trained in {time.time() - t0:.1f}s")
+    assert np.isfinite(float(train_loss(cfg, data, state))), "training diverged"
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b")
@@ -70,7 +112,14 @@ def main() -> None:
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--workers", type=int, default=8,
+                    help="parameter-server worker count (--arch gbdt)")
+    ap.add_argument("--scan", action="store_true",
+                    help="run the GBDT trainer in its lax.scan form")
     args = ap.parse_args()
+
+    if args.arch == "gbdt":
+        return run_gbdt(args)
 
     cfg = configs.get(args.arch)
     if args.reduced:

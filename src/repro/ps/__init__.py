@@ -1,0 +1,44 @@
+"""Parameter-server execution layer (the paper's Algorithm 3, productized).
+
+  * ``engine``    — the single Trainer API + the one shared round body
+                    (worker ``propose_tree`` / server ``server_fold``).
+  * ``schedules`` — delay-schedule providers k(j): closed forms, realized
+                    arrays, or on-the-spot cluster simulation.
+  * ``worker``    — the worker pool as one vmapped multi-tree build
+                    (the executable Fig. 10 speedup path).
+  * ``sharded``   — shard_map data-parallel builds: per-shard histogram
+                    kernels merged with a psum over the 'data' mesh axis.
+"""
+from repro.ps.engine import (
+    Trainer,
+    get_trainer,
+    propose_tree,
+    round_body,
+    server_fold,
+    train,
+)
+from repro.ps.schedules import (
+    constant_delay,
+    max_staleness,
+    resolve_schedule,
+    worker_round_robin,
+)
+from repro.ps.sharded import build_histogram_sharded, make_sharded_builder
+from repro.ps.worker import build_trees_batched, train_worker_parallel
+
+__all__ = [
+    "Trainer",
+    "get_trainer",
+    "propose_tree",
+    "round_body",
+    "server_fold",
+    "train",
+    "constant_delay",
+    "max_staleness",
+    "resolve_schedule",
+    "worker_round_robin",
+    "build_histogram_sharded",
+    "make_sharded_builder",
+    "build_trees_batched",
+    "train_worker_parallel",
+]

@@ -1,0 +1,260 @@
+"""The parameter-server training engine: ONE round body, every trainer.
+
+Algorithm 3 splits a boosting round across the PS roles:
+
+  worker  — pull a (possibly stale) prediction vector F^{k(j)}, draw the
+            Bernoulli subdataset Q, build the gradient target, fit a tree
+            (``propose_tree``);
+  server  — fold the pushed tree into the live state F <- F + v * Tree
+            (``server_fold``).
+
+``round_body`` composes the two; it is the only place that logic exists.
+The legacy entry points (``core.sgbdt.train_serial``,
+``core.async_sgbdt.train_async`` / ``train_async_scan``) are thin shims
+over ``Trainer``, which executes the same step function in two forms:
+
+  * a Python loop with per-round eval hooks (experiments), and
+  * a single ``lax.scan`` program (the form the distributed dry-run lowers).
+
+The serial trainer is not a separate code path: it is the round-robin
+schedule with W = 1 (k(j) = j, zero staleness).
+
+Sharding: given a mesh whose ``'data'`` axis has more than one shard, the
+tree build runs as ``shard_map`` over data shards — each shard feeds its
+local samples to the histogram kernel and the level histograms merge with
+a ``psum`` (see ``repro.ps.sharded``) — the block-distributed /
+DimBoost-style central-aggregation shape, but on ICI collectives instead
+of one server NIC.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sgbdt import SGBDTConfig, TrainState, init_state
+from repro.data.sampling import bernoulli_weights
+from repro.ps.schedules import max_staleness, resolve_schedule
+from repro.trees.binning import BinnedData
+from repro.trees.forest import forest_push
+from repro.trees.learner import build_tree
+from repro.trees.tree import Tree, apply_tree
+
+# (bins, g, h, rng) -> Tree; None means the plain single-device build.
+TreeBuilder = Callable[[jax.Array, jax.Array, jax.Array, jax.Array], Tree]
+
+
+# ------------------------------------------------------------- round body
+def propose_tree(
+    cfg: SGBDTConfig,
+    data: BinnedData,
+    f_target: jax.Array,
+    rng: jax.Array,
+    builder: TreeBuilder | None = None,
+) -> tuple[Tree, jax.Array]:
+    """Worker side: sample Q -> build target from F^{k(j)} -> fit a tree.
+
+    Returns the tree and its prediction delta on the training bins (the
+    "push" payload: the server folds the delta without re-evaluating).
+    """
+    r_sample, r_feat = jax.random.split(rng)
+    m_prime, _ = bernoulli_weights(r_sample, cfg.sampling_rate, data.multiplicity)
+    g, h = cfg.grad_hess(data.labels, f_target)
+    hess_w = m_prime * h if cfg.step_kind == "newton" else m_prime
+    if builder is None:
+        tree = build_tree(cfg.learner, data.bins, m_prime * g, hess_w, r_feat)
+    else:
+        tree = builder(data.bins, m_prime * g, hess_w, r_feat)
+    return tree, apply_tree(tree, data.bins)
+
+
+def server_fold(cfg, forest, f_live, tree, delta):
+    """Server side: F <- F + v * Tree (Algorithm 3, server step 2).
+
+    The barrier pins the scaled delta to a rounded f32 value before the
+    add, so XLA cannot contract the multiply-add into an FMA in one
+    execution form (per-round loop) but not another (scan / vmapped worker
+    blocks): the fold itself is bit-identical everywhere, and cross-form
+    drift is confined to the tree-build pipeline's compilation.
+    """
+    scaled = jax.lax.optimization_barrier(jnp.float32(cfg.step_length) * delta)
+    return (
+        forest_push(forest, tree, jnp.float32(cfg.step_length)),
+        f_live + scaled,
+    )
+
+
+def round_body(cfg, data, forest, f_live, f_target, rng, builder=None):
+    """One boosting round. Splitting ``f_target`` from ``f_live`` is what
+    makes this body shared between every trainer: the tree is built against
+    (possibly stale) ``f_target`` but folded into the live server state."""
+    tree, delta = propose_tree(cfg, data, f_target, rng, builder)
+    return server_fold(cfg, forest, f_live, tree, delta)
+
+
+# ---------------------------------------------------------------- trainer
+class Trainer:
+    """Mesh-aware parameter-server GBDT trainer.
+
+    One instance per ``SGBDTConfig`` (jit caches live on the instance).
+    The delay schedule is supplied per ``train`` call — anything
+    ``ps.schedules.resolve_schedule`` accepts: a closed form spec, a
+    realized k(j) array, or a ``ClusterSpec`` to simulate on the spot.
+
+    With ``mesh`` whose ``axis_name`` axis has > 1 shard, tree builds run
+    data-parallel via ``shard_map`` + ``psum`` (samples must divide the
+    shard count; pad the dataset if needed).
+    """
+
+    def __init__(
+        self,
+        cfg: SGBDTConfig,
+        *,
+        mesh: jax.sharding.Mesh | None = None,
+        axis_name: str = "data",
+    ):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self.builder: TreeBuilder | None = None
+        if mesh is not None and dict(mesh.shape).get(axis_name, 1) > 1:
+            from repro.ps.sharded import make_sharded_builder
+
+            self.builder = make_sharded_builder(cfg.learner, mesh, axis_name)
+        self._loop_cache: dict[int, Callable] = {}
+        self._scan_cache: dict[int, Callable] = {}
+
+    # The unified step: loop and scan trace exactly this function. The scan
+    # form adds a per-round loss as a scan output; the loop form does not
+    # pay for it.
+    def _step(self, ring_size: int):
+        cfg, builder = self.cfg, self.builder
+
+        def step(data, carry, xs):
+            forest, f, ring = carry
+            j, k_j, rng = xs
+            f_target = ring[k_j % ring_size]
+            forest, f = round_body(cfg, data, forest, f, f_target, rng, builder)
+            ring = jax.lax.dynamic_update_index_in_dim(
+                ring, f, (j + 1) % ring_size, 0
+            )
+            return (forest, f, ring)
+
+        return step
+
+    def _prep(self, data, schedule, seed):
+        sched = resolve_schedule(schedule, self.cfg.n_trees)
+        ring_size = max_staleness(sched) + 1
+        keys = jax.random.split(jax.random.PRNGKey(seed), self.cfg.n_trees)
+        state = init_state(self.cfg, data)
+        ring = jnp.broadcast_to(state.f, (ring_size, state.f.shape[0]))
+        return sched, ring_size, keys, state, ring
+
+    def train(
+        self,
+        data: BinnedData,
+        schedule=("round_robin", 1),
+        seed: int = 0,
+        eval_every: int = 0,
+        eval_fn: Callable[[TrainState, int], None] | None = None,
+    ) -> TrainState:
+        """Python-loop execution with per-round eval hooks."""
+        sched, ring_size, keys, state, ring = self._prep(data, schedule, seed)
+        if ring_size not in self._loop_cache:
+            self._loop_cache[ring_size] = jax.jit(self._step(ring_size))
+        step = self._loop_cache[ring_size]
+        forest, f = state.forest, state.f
+        carry = (forest, f, ring)
+        for j in range(self.cfg.n_trees):
+            carry = step(
+                data,
+                carry,
+                (
+                    jnp.asarray(j, jnp.int32),
+                    jnp.asarray(int(sched[j]), jnp.int32),
+                    keys[j],
+                ),
+            )
+            if eval_fn is not None and eval_every and (j + 1) % eval_every == 0:
+                eval_fn(
+                    TrainState(carry[0], carry[1], jnp.asarray(j + 1, jnp.int32)),
+                    j + 1,
+                )
+        forest, f, _ = carry
+        return TrainState(
+            forest=forest, f=f, step=jnp.asarray(self.cfg.n_trees, jnp.int32)
+        )
+
+    def scan_with(
+        self,
+        data: BinnedData,
+        schedule: jax.Array,
+        rngs: jax.Array,
+        ring_size: int,
+    ) -> tuple[TrainState, jax.Array]:
+        """Whole run as one ``lax.scan`` over an explicit (k(j), keys) pair;
+        returns per-round train losses too. The program the dry-run lowers."""
+        cfg = self.cfg
+        if ring_size not in self._scan_cache:
+            step = self._step(ring_size)
+
+            @jax.jit
+            def run(data, schedule, rngs):
+                def body(carry, xs):
+                    carry = step(data, carry, xs)
+                    loss = cfg.loss_fn(data.labels, carry[1], data.multiplicity)
+                    return carry, loss
+
+                state = init_state(cfg, data)
+                ring = jnp.broadcast_to(state.f, (ring_size, state.f.shape[0]))
+                (forest, f, _), losses = jax.lax.scan(
+                    body,
+                    (state.forest, state.f, ring),
+                    (
+                        jnp.arange(cfg.n_trees, dtype=jnp.int32),
+                        schedule,
+                        rngs,
+                    ),
+                )
+                return (
+                    TrainState(forest, f, jnp.asarray(cfg.n_trees, jnp.int32)),
+                    losses,
+                )
+
+            self._scan_cache[ring_size] = run
+        return self._scan_cache[ring_size](data, jnp.asarray(schedule), rngs)
+
+    def train_scan(
+        self, data: BinnedData, schedule=("round_robin", 1), seed: int = 0
+    ) -> tuple[TrainState, jax.Array]:
+        """scan_with, but resolving the schedule provider and drawing keys."""
+        sched, ring_size, keys, _, _ = self._prep(data, schedule, seed)
+        return self.scan_with(data, jnp.asarray(sched), keys, ring_size)
+
+
+# One cached Trainer per config so the legacy shims share jit caches the way
+# the old module-level ``@jax.jit(static_argnames=('cfg', ...))`` entry
+# points did.
+_TRAINERS: dict[SGBDTConfig, Trainer] = {}
+
+
+def get_trainer(cfg: SGBDTConfig) -> Trainer:
+    if cfg not in _TRAINERS:
+        _TRAINERS[cfg] = Trainer(cfg)
+    return _TRAINERS[cfg]
+
+
+def train(
+    cfg: SGBDTConfig,
+    data: BinnedData,
+    schedule=("round_robin", 1),
+    seed: int = 0,
+    eval_every: int = 0,
+    eval_fn=None,
+) -> TrainState:
+    """Functional convenience over the cached per-config Trainer."""
+    return get_trainer(cfg).train(
+        data, schedule, seed=seed, eval_every=eval_every, eval_fn=eval_fn
+    )

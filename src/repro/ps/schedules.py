@@ -1,0 +1,86 @@
+"""Delay-schedule providers for the parameter-server engine.
+
+Asynchrony is entirely described by the version map k(j): server update j
+folds in a tree that was built from F^{k(j)} (staleness tau_j = j - k(j)).
+Prop. 1 is stated in terms of k(j), so the engine executes k(j) exactly.
+Schedules come from three kinds of provider, all normalized here:
+
+  * closed forms — ``constant_delay`` / ``worker_round_robin`` (also
+    addressable as ``("constant", tau)`` / ``("round_robin", W)`` specs);
+  * realized schedules — an explicit int array, e.g. the output of the
+    event-driven cluster simulator (``repro.core.simulator``);
+  * a ``ClusterSpec`` — resolved by running the simulator on the spot.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import numpy as np
+
+
+def constant_delay(n_trees: int, tau: int) -> np.ndarray:
+    """k(j) = max(0, j - tau): every tree is exactly tau versions stale."""
+    j = np.arange(n_trees)
+    return np.maximum(0, j - tau).astype(np.int32)
+
+
+def worker_round_robin(n_trees: int, n_workers: int) -> np.ndarray:
+    """Steady-state schedule of W homogeneous workers (threads-as-workers).
+
+    A worker whose push became update j immediately pulls F^{j+1}; its next
+    push lands W updates later => k(j + W) = j + 1, i.e. k(j) = j - W + 1.
+    W = 1 is exactly the serial trainer (k(j) = j, zero staleness). The
+    first W trees are all built from F^0 (all workers pulled at launch).
+    """
+    j = np.arange(n_trees)
+    return np.maximum(0, j - n_workers + 1).astype(np.int32)
+
+
+def max_staleness(schedule: np.ndarray) -> int:
+    return int(np.max(np.arange(len(schedule)) - schedule))
+
+
+def resolve_schedule(spec, n_trees: int) -> np.ndarray:
+    """Normalize any schedule provider to a validated (n_trees,) int32 k(j).
+
+    Accepted specs:
+      * an int array / sequence — used as-is (realized schedule);
+      * ``("constant", tau)`` or ``("round_robin", W)``;
+      * a bare int W — shorthand for ``("round_robin", W)``;
+      * a ``repro.core.simulator.ClusterSpec`` — runs ``simulate_async``;
+      * a callable ``f(n_trees) -> np.ndarray``.
+    """
+    if isinstance(spec, int):
+        spec = ("round_robin", spec)
+    if isinstance(spec, tuple) and len(spec) == 2 and isinstance(spec[0], str):
+        kind, arg = spec
+        if kind == "constant":
+            if int(arg) < 0:
+                raise ValueError(f"constant delay needs tau >= 0, got {arg}")
+            sched = constant_delay(n_trees, int(arg))
+        elif kind == "round_robin":
+            if int(arg) < 1:
+                raise ValueError(f"round_robin needs >= 1 worker, got {arg}")
+            sched = worker_round_robin(n_trees, int(arg))
+        else:
+            raise ValueError(f"unknown schedule kind {kind!r}")
+    elif callable(spec):
+        sched = np.asarray(spec(n_trees), np.int32)
+    elif hasattr(spec, "n_workers") and hasattr(spec, "t_build"):  # ClusterSpec
+        from repro.core.simulator import simulate_async
+
+        sched = simulate_async(spec, n_trees).schedule
+    elif isinstance(spec, (np.ndarray, Sequence)) or hasattr(spec, "__array__"):
+        sched = np.asarray(spec, np.int32)
+    else:
+        raise TypeError(f"cannot resolve schedule from {type(spec).__name__}")
+
+    sched = np.asarray(sched, np.int32)
+    if sched.shape != (n_trees,):
+        raise ValueError(f"schedule shape {sched.shape} != ({n_trees},)")
+    j = np.arange(n_trees)
+    if (sched > j).any():
+        raise ValueError("causality violation: k(j) > j in schedule")
+    if (sched < 0).any():
+        raise ValueError("negative version in schedule")
+    return sched

@@ -2,6 +2,7 @@
 from repro.sharding.rules import (
     DEFAULT_RULES,
     batch_axes,
+    gbdt_data_specs,
     named,
     serving_rules,
     spec_for,
@@ -18,6 +19,7 @@ from repro.sharding.policy import (
 __all__ = [
     "DEFAULT_RULES",
     "batch_axes",
+    "gbdt_data_specs",
     "named",
     "serving_rules",
     "spec_for",

@@ -45,7 +45,32 @@ DEFAULT_RULES: dict[str, tuple[str, ...]] = {
     "heads": ("model",),
     "capacity": ("model", "data"),  # decode cache ring slots
     "media": (),
+    # --- GBDT parameter-server engine (repro.ps) ---
+    "samples": ("data",),           # binned rows / labels / targets / weights
+    "features": ("model",),         # feature columns of the binned matrix
 }
+
+
+def gbdt_data_specs(mesh: Mesh, shard_features: bool = False):
+    """PartitionSpecs for a ``BinnedData`` pytree on the PS mesh.
+
+    Samples shard over 'data' (each shard builds partial histograms that
+    merge with a psum — the engine's worker/server split); feature columns
+    optionally shard over 'model' for very wide datasets. Bin edges ride
+    with the features; the scalar ``n_bins`` is replicated.
+    """
+    from repro.trees.binning import BinnedData  # local: avoid a hard dep
+
+    names = dict(mesh.shape)
+    d = "data" if names.get("data", 1) > 1 else None
+    m = "model" if shard_features and names.get("model", 1) > 1 else None
+    return BinnedData(
+        bins=P(d, m),
+        bin_edges=P(m),
+        labels=P(d),
+        multiplicity=P(d),
+        n_bins=P(),
+    )
 
 
 def serving_rules() -> dict[str, tuple[str, ...]]:

@@ -32,6 +32,10 @@ class LearnerConfig(NamedTuple):
     min_child_hess: float = 1e-3
     feature_fraction: float = 0.8   # paper samples 80% of features per tree
     backend: str = "ref"        # 'ref' | 'pallas' | 'auto'
+    # Mesh axis samples are sharded over when building under shard_map
+    # (repro.ps.sharded): histograms and leaf stats psum across it; the rng
+    # must be replicated so every shard draws the same feature mask.
+    axis_name: str | None = None
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -58,7 +62,8 @@ def build_tree(
     for level in range(depth):
         n_nodes = 1 << level
         hist = ops.build_histogram(
-            bins, node, g, h, n_nodes, n_bins, backend=cfg.backend
+            bins, node, g, h, n_nodes, n_bins,
+            backend=cfg.backend, axis_name=cfg.axis_name,
         )
         gain = ops.split_gain(hist, cfg.lam, cfg.min_child_hess, backend=cfg.backend)
         gain = jnp.where(feat_mask[None, :, None], gain, -jnp.inf)  # (L, F, B)
@@ -85,6 +90,9 @@ def build_tree(
     n_leaves = 1 << depth
     leaf_g = jax.ops.segment_sum(g, node, num_segments=n_leaves)
     leaf_h = jax.ops.segment_sum(h, node, num_segments=n_leaves)
+    if cfg.axis_name is not None:    # merge leaf stats across data shards
+        leaf_g = jax.lax.psum(leaf_g, cfg.axis_name)
+        leaf_h = jax.lax.psum(leaf_h, cfg.axis_name)
     leaf_value = -leaf_g / (leaf_h + cfg.lam)
     leaf_value = jnp.where(leaf_h > 0, leaf_value, 0.0)
 

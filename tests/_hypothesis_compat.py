@@ -1,0 +1,74 @@
+"""Deterministic stand-ins for the small hypothesis API this suite uses.
+
+CI installs hypothesis (requirements.txt) and gets real property-based
+testing. On containers without it, test modules fall back to these shims:
+``@given`` becomes a pytest parametrization over a fixed number of
+deterministic draws from the same strategies, so the property checks still
+run (with less adversarial coverage) instead of dying at collection.
+
+Usage in a test module:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ModuleNotFoundError:
+        from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+_FALLBACK_EXAMPLES = 8
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class _Strategies:
+    @staticmethod
+    def integers(lo, hi):
+        return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+    @staticmethod
+    def sampled_from(items):
+        items = list(items)
+        return _Strategy(lambda rng: items[int(rng.integers(len(items)))])
+
+    @staticmethod
+    def floats(lo, hi, **_kw):
+        return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+st = _Strategies()
+
+
+def settings(**_kw):
+    """All hypothesis settings are irrelevant to the fixed-draw fallback."""
+
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    """Parametrize over deterministic draws from the given strategies."""
+
+    def deco(fn):
+        def wrapper(_example):
+            rng = np.random.default_rng(0xC0FFEE + _example)
+            fn(**{name: s.draw(rng) for name, s in strategies.items()})
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return pytest.mark.parametrize("_example", range(_FALLBACK_EXAMPLES))(
+            wrapper
+        )
+
+    return deco

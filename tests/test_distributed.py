@@ -26,10 +26,8 @@ _SCRIPT = textwrap.dedent(
     from repro.launch.steps import make_decode_step, make_train_step
 
     assert jax.device_count() == 8
-    mesh = jax.make_mesh(
-        (4, 2), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro.launch.mesh import _mesh
+    mesh = _mesh((4, 2), ("data", "model"))
 
     results = {}
     key = jax.random.PRNGKey(0)

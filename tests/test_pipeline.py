@@ -1,7 +1,10 @@
 """Data pipeline: packing invariants + deterministic sharded resumption."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from _hypothesis_compat import given, settings, st
 
 from repro.data.pipeline import TokenPipeline, pack_documents
 

@@ -1,0 +1,229 @@
+"""The PS execution layer: trainer equivalences, schedules, sharded builds.
+
+The contracts under test:
+  * serial training IS the W=1 round-robin schedule — bitwise;
+  * the engine's loop and scan forms produce identical forests;
+  * the vmapped worker pool executes the same schedule semantics as the
+    per-round loop (exact when split gains are decisive);
+  * the shard_map+psum histogram path matches the single-device kernel
+    (subprocess with a forced multi-device CPU platform).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.data as D
+from repro.core.sgbdt import SGBDTConfig, train_loss, train_serial
+from repro.core.simulator import ClusterSpec
+from repro.ps import (
+    Trainer,
+    resolve_schedule,
+    train_worker_parallel,
+    worker_round_robin,
+)
+from repro.ps.schedules import constant_delay, max_staleness
+from repro.trees.binning import BinnedData
+from repro.trees.learner import LearnerConfig
+
+
+def _forests_identical(a, b) -> bool:
+    return (
+        np.array_equal(np.asarray(a.feature), np.asarray(b.feature))
+        and np.array_equal(np.asarray(a.threshold), np.asarray(b.threshold))
+        and np.allclose(
+            np.asarray(a.leaf_value), np.asarray(b.leaf_value), atol=1e-6
+        )
+    )
+
+
+# ------------------------------------------------------------ equivalences
+def test_round_robin_w1_bitmatches_serial(fast_cfg, sparse_data):
+    """The serial trainer is the zero-staleness schedule, same program."""
+    st_serial = train_serial(fast_cfg, sparse_data, seed=0)
+    st_w1 = Trainer(fast_cfg).train(sparse_data, ("round_robin", 1), seed=0)
+    assert np.array_equal(np.asarray(st_serial.f), np.asarray(st_w1.f))
+    assert _forests_identical(st_serial.forest, st_w1.forest)
+
+
+def test_loop_and_scan_identical_forests(fast_cfg, sparse_data):
+    """Same schedule + seeds -> the two execution forms agree exactly."""
+    tr = Trainer(fast_cfg)
+    sched = worker_round_robin(fast_cfg.n_trees, 8)
+    st_loop = tr.train(sparse_data, sched, seed=0)
+    st_scan, losses = tr.train_scan(sparse_data, sched, seed=0)
+    assert np.array_equal(np.asarray(st_loop.f), np.asarray(st_scan.f))
+    assert _forests_identical(st_loop.forest, st_scan.forest)
+    assert losses.shape == (fast_cfg.n_trees,)
+    assert float(losses[-1]) < float(losses[0])
+
+
+def _decisive_data(n=256):
+    """A dataset whose split gains are decisively separated, so tree choice
+    cannot flip on ulp-level differences between compiled programs."""
+    rng = np.random.default_rng(0)
+    bins = rng.integers(0, 16, size=(n, 4)).astype(np.int32)
+    y = 10.0 * (bins[:, 0] > 8) + 3.0 * (bins[:, 1] > 4)
+    return BinnedData(
+        bins=jnp.asarray(bins),
+        bin_edges=jnp.zeros((4, 15), jnp.float32),
+        labels=jnp.asarray(y, jnp.float32),
+        multiplicity=jnp.ones((n,), jnp.float32),
+        n_bins=16,
+    )
+
+
+def test_worker_parallel_exact_on_decisive_splits():
+    """Batched worker-pool == per-round loop, tree for tree, when gains are
+    decisive (deterministic sampling, full features)."""
+    data = _decisive_data()
+    cfg = SGBDTConfig(
+        n_trees=12, step_length=0.5, sampling_rate=1.0, loss="mse",
+        learner=LearnerConfig(depth=2, n_bins=16, feature_fraction=1.0),
+    )
+    st_loop = Trainer(cfg).train(data, ("round_robin", 4), seed=0)
+    st_pool = train_worker_parallel(cfg, data, 4, seed=0)
+    assert _forests_identical(st_loop.forest, st_pool.forest)
+    np.testing.assert_allclose(
+        np.asarray(st_loop.f), np.asarray(st_pool.f), atol=1e-5
+    )
+
+
+def test_worker_parallel_loss_equivalence(fast_cfg, sparse_data):
+    """On realistic data, near-tied splits may resolve differently between
+    the batched and per-round programs; the trained models must agree at
+    the loss level."""
+    st_loop = Trainer(fast_cfg).train(sparse_data, ("round_robin", 8), seed=0)
+    st_pool = train_worker_parallel(fast_cfg, sparse_data, 8, seed=0)
+    l_loop = float(train_loss(fast_cfg, sparse_data, st_loop))
+    l_pool = float(train_loss(fast_cfg, sparse_data, st_pool))
+    assert abs(l_loop - l_pool) < 0.02, (l_loop, l_pool)
+
+
+def test_simulator_schedule_provider(fast_cfg, sparse_data):
+    """A ClusterSpec is a schedule provider: the engine simulates it and
+    trains on the realized k(j)."""
+    spec = ClusterSpec(n_workers=8, t_build=0.1, t_comm=0.01, t_server=0.01)
+    st = Trainer(fast_cfg).train(sparse_data, spec, seed=0)
+    from repro.core.sgbdt import init_state
+
+    l0 = float(train_loss(fast_cfg, sparse_data, init_state(fast_cfg, sparse_data)))
+    l1 = float(train_loss(fast_cfg, sparse_data, st))
+    assert l1 < 0.85 * l0
+
+
+# --------------------------------------------------------------- schedules
+def test_resolve_schedule_specs():
+    np.testing.assert_array_equal(
+        resolve_schedule(("constant", 3), 10), constant_delay(10, 3)
+    )
+    np.testing.assert_array_equal(
+        resolve_schedule(("round_robin", 4), 10), worker_round_robin(10, 4)
+    )
+    np.testing.assert_array_equal(
+        resolve_schedule(4, 10), worker_round_robin(10, 4)
+    )
+    np.testing.assert_array_equal(
+        resolve_schedule(lambda n: constant_delay(n, 2), 10),
+        constant_delay(10, 2),
+    )
+    explicit = worker_round_robin(10, 2)
+    np.testing.assert_array_equal(resolve_schedule(explicit, 10), explicit)
+
+
+def test_resolve_schedule_rejects_bad():
+    with pytest.raises(ValueError):
+        resolve_schedule(np.arange(5), 10)            # wrong length
+    with pytest.raises(ValueError):
+        resolve_schedule(np.arange(10) + 1, 10)       # k(j) > j
+    with pytest.raises(ValueError):
+        resolve_schedule(np.full(10, -1), 10)         # negative version
+    with pytest.raises(ValueError):
+        resolve_schedule(("warp", 3), 10)             # unknown closed form
+    assert max_staleness(worker_round_robin(16, 4)) == 3
+
+
+# ------------------------------------------------------- sharded histograms
+_SHARD_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    import repro.data as D
+    from repro.kernels import ref
+    from repro.ps.sharded import build_histogram_sharded, make_sharded_builder
+    from repro.trees.learner import LearnerConfig, build_tree
+
+    assert jax.device_count() == 8
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    n, f, n_bins, n_nodes = 512, 16, 16, 4
+    bins = jax.random.randint(k1, (n, f), 0, n_bins, dtype=jnp.int32)
+    node = jax.random.randint(k2, (n,), -1, n_nodes, dtype=jnp.int32)
+    grad = jax.random.normal(k3, (n,))
+    hess = jax.random.uniform(k4, (n,))
+    h_ref = ref.histogram_ref(bins, node, grad, hess, n_nodes, n_bins)
+    h_sh = build_histogram_sharded(
+        mesh, bins, node, grad, hess, n_nodes, n_bins, backend="ref"
+    )
+    hist_max_diff = float(jnp.max(jnp.abs(h_ref - h_sh)))
+
+    cfg = LearnerConfig(depth=3, n_bins=64, feature_fraction=1.0)
+    data = D.make_sparse_classification(512, 64, 8, seed=3)
+    g = jax.random.normal(key, (512,))
+    h = jnp.abs(jax.random.normal(k2, (512,))) + 0.1
+    t0 = build_tree(cfg, data.bins, g, h, key)
+    t1 = make_sharded_builder(cfg, mesh)(data.bins, g, h, key)
+    results = {
+        "hist_max_diff": hist_max_diff,
+        "tree_feature_equal": bool(
+            np.array_equal(np.asarray(t0.feature), np.asarray(t1.feature))
+        ),
+        "tree_threshold_equal": bool(
+            np.array_equal(np.asarray(t0.threshold), np.asarray(t1.threshold))
+        ),
+        "leaf_max_diff": float(
+            jnp.max(jnp.abs(t0.leaf_value - t1.leaf_value))
+        ),
+    }
+    print("RESULTS_JSON=" + json.dumps(results))
+    """
+)
+
+
+@pytest.fixture(scope="module")
+def shard_results():
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARD_SCRIPT],
+        capture_output=True, text=True, timeout=600,
+        env={**os.environ, "PYTHONPATH": "src"},
+    )
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULTS_JSON="):
+            return json.loads(line.split("=", 1)[1])
+    raise RuntimeError(f"subprocess failed:\n{proc.stderr[-3000:]}")
+
+
+def test_sharded_histogram_matches_single_device(shard_results):
+    """shard_map over a 4-shard 'data' axis + psum == the one-device kernel
+    (disjoint sample subsets per cell, so partial sums compose exactly)."""
+    assert shard_results["hist_max_diff"] < 1e-4, shard_results
+
+
+def test_sharded_tree_build_matches_single_device(shard_results):
+    assert shard_results["tree_feature_equal"], shard_results
+    assert shard_results["tree_threshold_equal"], shard_results
+    assert shard_results["leaf_max_diff"] < 1e-5, shard_results
