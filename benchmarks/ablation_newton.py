@@ -14,7 +14,6 @@ degradation from W=1 to W=16/32.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import paper_cfg, realsim_like, save
 from repro.core.async_sgbdt import train_async, worker_round_robin

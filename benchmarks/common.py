@@ -6,7 +6,6 @@ import pathlib
 import time
 
 import jax
-import numpy as np
 
 import repro.data as D
 from repro.core.sgbdt import SGBDTConfig

@@ -29,7 +29,7 @@ from repro.core.baselines import (
     speedup_model_sync,
 )
 from repro.core.simulator import ClusterSpec, simulate_async, simulate_sync
-from repro.core.sgbdt import init_state, sgbdt_round
+from repro.core.sgbdt import init_state
 from repro.data.sampling import bernoulli_weights
 from repro.ps.worker import build_trees_batched
 from repro.trees.learner import build_tree

@@ -10,7 +10,6 @@ run explicitly:  PYTHONPATH=src python -m benchmarks.fig5_fig6_paperfaithful
 """
 from __future__ import annotations
 
-import numpy as np
 
 import repro.data as D
 from benchmarks.common import save

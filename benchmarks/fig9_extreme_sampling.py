@@ -3,7 +3,6 @@ asynchrony (conclusion 1+3) but slows convergence — the trees are built
 from too few samples and get 'distorted'."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import paper_cfg, realsim_like, save
 from repro.core.async_sgbdt import train_async, worker_round_robin

@@ -1,0 +1,126 @@
+"""Forest-serving throughput: batch size x forest size sweep -> JSON record.
+
+Measures the jitted serve-time predict (raw floats -> training-bin lookup ->
+fused forest traversal) the way Anghel et al. (2018) benchmark GBT
+inference: steady-state latency and rows/s per (batch, trees) cell, plus an
+end-to-end ``ForestServer`` wave measurement that includes queueing and
+padding. Forest contents are random — traversal cost is data-independent —
+so the sweep needs no training run.
+
+    PYTHONPATH=src python -m benchmarks.gbdt_serve [--full] [--backend ref]
+
+Writes ``experiments/gbdt_serve.json`` (the CI benchmark-smoke artifact).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save, time_call
+from repro.serving import ForestServer, PredictRequest
+from repro.trees.binning import make_bins
+from repro.trees.forest import Forest
+from repro.trees.tree import tree_num_nodes
+
+QUICK = {"batches": [16, 64, 256], "trees": [8, 32, 128], "depth": 5, "dim": 32}
+FULL = {"batches": [64, 256, 1024, 4096], "trees": [32, 128, 400], "depth": 7,
+        "dim": 128}
+
+
+def random_forest(capacity: int, depth: int, dim: int, n_bins: int,
+                  seed: int = 0) -> Forest:
+    """A fully-live forest with random splits/leaves (cost-equivalent to a
+    trained one: traversal work does not depend on the values)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    n_int, n_leaf = tree_num_nodes(depth)
+    return Forest(
+        feature=jax.random.randint(k1, (capacity, n_int), 0, dim, dtype=jnp.int32),
+        threshold=jax.random.randint(k2, (capacity, n_int), 0, n_bins,
+                                     dtype=jnp.int32),
+        leaf_value=0.1 * jax.random.normal(k3, (capacity, n_leaf), jnp.float32),
+        n_trees=jnp.asarray(capacity, jnp.int32),
+        base_score=jnp.asarray(0.0, jnp.float32),
+    )
+
+
+def run(quick: bool = True, backend: str = "auto", seed: int = 0) -> dict:
+    p = QUICK if quick else FULL
+    n_bins = 64
+    rng = np.random.default_rng(seed)
+    edges = jnp.asarray(
+        make_bins(rng.standard_normal((4096, p["dim"])).astype(np.float32), n_bins)
+    )
+    out: dict = {
+        "backend": backend, "depth": p["depth"], "dim": p["dim"],
+        "n_bins": n_bins, "sweep": [],
+    }
+    for n_trees in p["trees"]:
+        forest = random_forest(n_trees, p["depth"], p["dim"], n_bins, seed)
+        server = ForestServer(forest, edges, max_rows=max(p["batches"]),
+                              backend=backend)
+        for batch in p["batches"]:
+            x = jnp.asarray(
+                rng.standard_normal((batch, p["dim"])).astype(np.float32)
+            )
+            t_s, _ = time_call(server._predict, forest, edges, x)
+            rec = {
+                "batch": batch, "trees": n_trees,
+                "latency_ms": 1e3 * t_s,
+                "rows_per_s": batch / t_s,
+                "tree_rows_per_s": batch * n_trees / t_s,
+            }
+            out["sweep"].append(rec)
+            print(f"  trees={n_trees:4d} batch={batch:5d}: "
+                  f"{rec['latency_ms']:8.3f} ms  {rec['rows_per_s']:12,.0f} rows/s",
+                  flush=True)
+
+    # End-to-end wave path: queueing + packing + padding included.
+    n_trees = p["trees"][-1]
+    forest = random_forest(n_trees, p["depth"], p["dim"], n_bins, seed)
+    max_rows = p["batches"][-1]
+    server = ForestServer(forest, edges, max_rows=max_rows, backend=backend)
+    reqs = [
+        PredictRequest(
+            uid=i,
+            x=rng.standard_normal(
+                (int(rng.integers(1, max_rows // 2 + 1)), p["dim"])
+            ).astype(np.float32),
+        )
+        for i in range(24)
+    ]
+    def serve_all():
+        """One full pass; wave count deltas so warmup runs don't pollute it.
+        (time_call's untimed warmup invocation also compiles the predict.)"""
+        n0 = server.waves_served
+        outs = server.run(reqs)
+        return outs, server.waves_served - n0
+
+    t_s, (outs, waves) = time_call(serve_all, reps=1)
+    rows = sum(len(r.scores) for r in outs)
+    out["engine"] = {
+        "trees": n_trees, "max_rows": max_rows, "requests": len(reqs),
+        "rows": rows, "wall_s": t_s, "rows_per_s": rows / t_s,
+        "waves": waves,
+    }
+    print(f"  engine: {rows} rows over {len(reqs)} requests in {t_s:.3f}s "
+          f"({rows / t_s:,.0f} rows/s)", flush=True)
+    save("gbdt_serve", out)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", dest="quick", action="store_false", default=True)
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "ref", "pallas"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    return run(quick=args.quick, backend=args.backend, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

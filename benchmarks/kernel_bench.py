@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import save, time_call
-from repro.kernels import ops, ref
+from repro.kernels import ops
 
 CASES = [
     # (n, f, n_bins, n_nodes)

@@ -8,7 +8,6 @@ cluster simulator, held-out evaluation, and checkpointing.
 import argparse
 import time
 
-import jax
 import numpy as np
 
 import repro.data as D
@@ -16,7 +15,7 @@ from repro.checkpoint import CheckpointManager
 from repro.core.sgbdt import SGBDTConfig, train_loss
 from repro.core.simulator import ClusterSpec, simulate_async
 from repro.ps import Trainer
-from repro.trees import apply_bins, forest_predict
+from repro.trees import forest_predict
 from repro.trees.learner import LearnerConfig
 from repro.trees.losses import sigmoid2
 

@@ -67,7 +67,9 @@ def main():
     summarize("fresh", fresh)
     summarize("stale", stale)
     summarize("stale+prop1", scaled)
-    noise = lambda l: float(np.std(np.diff(l[len(l) // 2:])))
+    def noise(l):
+        return float(np.std(np.diff(l[len(l) // 2:])))
+
     print(f"\nstep-to-step noise: fresh {noise(fresh):.3f}  "
           f"stale {noise(stale):.3f}  stale+prop1 {noise(scaled):.3f}")
     print("expected (paper conclusion 2): fresh converges fastest; plain "

@@ -3,11 +3,13 @@
 - ``histogram``: per-(node, feature, bin) grad/hess sums as one-hot MXU
   matmuls (the TPU adaptation of LightGBM's scatter-add histogram).
 - ``split_scan``: fused prefix-sum + gain surface.
+- ``forest_traversal``: fused batched forest traversal for serving.
 - ``ops``: jit'd wrappers with ref/pallas backend dispatch.
 - ``ref``: pure-jnp semantics of record.
 """
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.forest_traversal import forest_traverse_pallas
 from repro.kernels.histogram import histogram_pallas
 from repro.kernels.split_scan import split_gain_pallas
 
@@ -15,6 +17,7 @@ __all__ = [
     "ops",
     "ref",
     "flash_attention_pallas",
+    "forest_traverse_pallas",
     "histogram_pallas",
     "split_gain_pallas",
 ]

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: fused batched forest traversal for serving.
+
+Inference cost in GBT deployments is dominated by batched traversal
+throughput (Anghel et al., 2018): for every request row, T trees each do a
+depth-d heap descent and the T leaf values are summed. Evaluated naively
+(one tree at a time, XLA scan like ``kernels.ref.apply_forest_ref``), the
+per-tree prediction vector (N,) round-trips HBM T times and nothing of the
+tree arrays is reused across samples.
+
+The kernel evaluates a (sample_block, tree_block) tile per grid step with
+everything resident in VMEM:
+
+- tree arrays arrive pre-transposed as (n_int, T) / (n_leaf, T) so each
+  descent level is two ``take_along_axis`` gathers over VMEM-resident
+  blocks — ``feature[t, node]`` then ``bins[s, feature]``;
+- the heap descent is unrolled over the static depth (node = 2*node + 1 +
+  (bin > threshold)), so there is no per-level control flow;
+- leaf values are masked by the live-tree count (partially-filled forests
+  serve correctly even if dead slots hold stale trees) and reduced on-chip;
+  only the (N,) partial sum is written back, accumulated across tree
+  blocks — nothing of size (N, T) ever touches HBM.
+
+Grid: (sample_blocks, tree_blocks); the tree axis is innermost and
+accumulates into the same output block (the histogram kernel's reduce
+pattern).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _traverse_kernel(
+    bins_ref,   # (S_blk, F) int32
+    feat_ref,   # (n_int, T_blk) int32 — transposed tree arrays
+    thr_ref,    # (n_int, T_blk) int32
+    leaf_ref,   # (n_leaf, T_blk) f32
+    ntree_ref,  # (1, 1) int32 in SMEM — live-slot count
+    out_ref,    # (S_blk, 1) f32 — accumulated over tree blocks
+    *,
+    depth: int,
+    tree_block: int,
+):
+    tb = pl.program_id(1)
+
+    @pl.when(tb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    bins = bins_ref[...]
+    feat = feat_ref[...]
+    thr = thr_ref[...]
+    s_blk = bins.shape[0]
+
+    # Depth-unrolled heap descent, all (sample, tree) pairs at once.
+    node = jnp.zeros((s_blk, tree_block), jnp.int32)
+    for _ in range(depth):
+        f = jnp.take_along_axis(feat, node, axis=0)   # (S, T) split features
+        t = jnp.take_along_axis(thr, node, axis=0)    # (S, T) split bins
+        v = jnp.take_along_axis(bins, f, axis=1)      # (S, T) sample bins
+        node = 2 * node + 1 + (v > t).astype(jnp.int32)
+
+    leaf = node - ((1 << depth) - 1)
+    vals = jnp.take_along_axis(leaf_ref[...], leaf, axis=0)  # (S, T)
+    tree_idx = tb * tree_block + jax.lax.broadcasted_iota(
+        jnp.int32, vals.shape, 1
+    )
+    vals = jnp.where(tree_idx < ntree_ref[0, 0], vals, 0.0)
+    out_ref[...] += jnp.sum(vals, axis=1, keepdims=True)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("depth", "sample_block", "tree_block", "interpret"),
+)
+def forest_traverse_pallas(
+    bins: jax.Array,        # (N, F) int32 — N % sample_block == 0 (wrapper pads)
+    feature: jax.Array,     # (T, 2^d - 1) int32 — T % tree_block == 0
+    threshold: jax.Array,   # (T, 2^d - 1) int32
+    leaf_value: jax.Array,  # (T, 2^d) f32
+    n_trees: jax.Array,     # () int32 — live slots; slots >= n_trees add 0
+    depth: int,
+    sample_block: int = 256,
+    tree_block: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Masked forest sum (N,) f32. See module docstring."""
+    n, f = bins.shape
+    t, n_int = feature.shape
+    n_leaf = leaf_value.shape[1]
+    assert n % sample_block == 0, "wrapper must pad samples"
+    assert t % tree_block == 0, "wrapper must pad trees"
+    ns, nt = n // sample_block, t // tree_block
+
+    out = pl.pallas_call(
+        functools.partial(_traverse_kernel, depth=depth, tree_block=tree_block),
+        grid=(ns, nt),
+        in_specs=[
+            pl.BlockSpec((sample_block, f), lambda sb, tb: (sb, 0)),
+            pl.BlockSpec((n_int, tree_block), lambda sb, tb: (0, tb)),
+            pl.BlockSpec((n_int, tree_block), lambda sb, tb: (0, tb)),
+            pl.BlockSpec((n_leaf, tree_block), lambda sb, tb: (0, tb)),
+            pl.BlockSpec((1, 1), lambda sb, tb: (0, 0), memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((sample_block, 1), lambda sb, tb: (sb, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=interpret,
+    )(
+        bins,
+        feature.T,
+        threshold.T,
+        leaf_value.T,
+        jnp.asarray(n_trees, jnp.int32).reshape(1, 1),
+    )
+    return out[:, 0]

@@ -128,7 +128,52 @@ def best_split(
     return best, (idx // nb).astype(jnp.int32), (idx % nb).astype(jnp.int32)
 
 
-apply_forest = _ref.apply_forest_ref  # gather-bound; pure-jnp is the right form
+apply_forest = _ref.apply_forest_ref  # unmasked train-time form (zero-padded slots)
+
+
+def forest_traverse(
+    bins: jax.Array,
+    feature: jax.Array,
+    threshold: jax.Array,
+    leaf_value: jax.Array,
+    n_trees,
+    depth: int,
+    backend: str = "auto",
+    sample_block: int = 256,
+    tree_block: int = 512,
+) -> jax.Array:
+    """Masked forest sum (N,) f32 — the serving predict. See forest_traversal.py.
+
+    Slots >= ``n_trees`` contribute exactly 0 regardless of their contents,
+    so partially-filled and hot-swapped forests serve correctly. The ref
+    backend is the O(N)-memory scan (production CPU form); the kernel's
+    bitwise oracle is ``ref.forest_traverse_ref``.
+    """
+    if backend == "auto":
+        backend = _default_backend()
+    n_trees = jnp.asarray(n_trees, jnp.int32)
+    if backend == "ref":
+        return _ref.apply_forest_ref(
+            bins, feature, threshold, leaf_value, depth, n_trees
+        )
+    if backend != "pallas":
+        raise ValueError(f"unknown backend {backend!r}")
+    from repro.kernels.forest_traversal import forest_traverse_pallas
+
+    interpret = jax.default_backend() != "tpu"
+    n = bins.shape[0]
+    t = feature.shape[0]
+    sb = min(sample_block, max(n, 1))
+    tb = min(tree_block, max(t, 1))
+    binsp = _pad_to(bins, sb, 0, 0)
+    featp = _pad_to(feature, tb, 0, 0)
+    thrp = _pad_to(threshold, tb, 0, 0)
+    leafp = _pad_to(leaf_value, tb, 0, 0.0)
+    out = forest_traverse_pallas(
+        binsp, featp, thrp, leafp, n_trees, depth,
+        sample_block=sb, tree_block=tb, interpret=interpret,
+    )
+    return out[:n]
 
 
 def _flash_call(qf, kf, vf, causal, group, block_q, block_k):

@@ -94,6 +94,48 @@ def flash_attention_ref(
     return jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
+def _tree_leaf_values(
+    bins: jax.Array, feat: jax.Array, thr: jax.Array, leaves: jax.Array, depth: int
+) -> jax.Array:
+    """One tree's leaf value per sample, (N,) — the shared heap descent."""
+    node = jnp.zeros((bins.shape[0],), jnp.int32)
+
+    def step(_, node):
+        f = jnp.take(feat, node)
+        t = jnp.take(thr, node)
+        v = jnp.take_along_axis(bins, f[:, None], axis=1)[:, 0]
+        return 2 * node + 1 + (v > t).astype(jnp.int32)
+
+    node = jax.lax.fori_loop(0, depth, step, node)
+    return jnp.take(leaves, node - ((1 << depth) - 1))
+
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def forest_traverse_ref(
+    bins: jax.Array,        # (N, F) int32
+    feature: jax.Array,     # (T, 2^d - 1) int32
+    threshold: jax.Array,   # (T, 2^d - 1) int32
+    leaf_value: jax.Array,  # (T, 2^d) f32
+    n_trees: jax.Array,     # () int32 — live slots
+    depth: int,
+) -> jax.Array:
+    """Masked forest sum, (N,) f32 — the traversal kernel's oracle.
+
+    Unlike ``apply_forest_ref`` this masks slots >= ``n_trees``, so a
+    partially-filled forest predicts correctly even when dead slots hold
+    stale (nonzero) trees — the hot-swap serving contract. Reduction shape
+    mirrors the kernel (per-tree values, one reduce over the tree axis):
+    interpret-mode parity is bitwise. It materializes a transient (T, N)
+    buffer; for large train-set evaluation use ``apply_forest_ref`` with
+    ``n_trees``, the O(N)-memory scan form of the same sum.
+    """
+    per_tree = jax.vmap(
+        lambda feat, thr, leaves: _tree_leaf_values(bins, feat, thr, leaves, depth)
+    )(feature, threshold, leaf_value)                          # (T, N)
+    live = jnp.arange(feature.shape[0])[:, None] < n_trees
+    return jnp.sum(jnp.where(live, per_tree, 0.0), axis=0).astype(jnp.float32)
+
+
 @functools.partial(jax.jit, static_argnames=("depth",))
 def apply_forest_ref(
     bins: jax.Array,        # (N, F) int32
@@ -101,25 +143,27 @@ def apply_forest_ref(
     threshold: jax.Array,   # (T, 2^d - 1) int32
     leaf_value: jax.Array,  # (T, 2^d) f32
     depth: int,
+    n_trees: jax.Array | None = None,   # () int32; None = all slots live
 ) -> jax.Array:
-    """Sum of per-tree predictions, (N,) f32 — the forest F(x) evaluation."""
+    """Sum of per-tree predictions, (N,) f32 — the forest F(x) evaluation.
+
+    Scan-accumulated: O(N) live memory regardless of T (the right form for
+    full-train-set evaluation). With ``n_trees``, slots past the live count
+    contribute exactly 0 (same masking contract as ``forest_traverse_ref``;
+    on zero-padded training forests the two agree either way).
+    """
 
     def one_tree(carry, tree):
+        total, idx = carry
         feat, thr, leaves = tree
-        node = jnp.zeros((bins.shape[0],), jnp.int32)
+        vals = _tree_leaf_values(bins, feat, thr, leaves, depth)
+        if n_trees is not None:
+            vals = jnp.where(idx < n_trees, vals, 0.0)
+        return (total + vals, idx + 1), None
 
-        def step(_, node):
-            f = jnp.take(feat, node)
-            t = jnp.take(thr, node)
-            v = jnp.take_along_axis(bins, f[:, None], axis=1)[:, 0]
-            return 2 * node + 1 + (v > t).astype(jnp.int32)
-
-        node = jax.lax.fori_loop(0, depth, step, node)
-        leaf = node - ((1 << depth) - 1)
-        return carry + jnp.take(leaves, leaf), None
-
-    total, _ = jax.lax.scan(
-        one_tree, jnp.zeros((bins.shape[0],), jnp.float32),
+    (total, _), _ = jax.lax.scan(
+        one_tree,
+        (jnp.zeros((bins.shape[0],), jnp.float32), jnp.asarray(0, jnp.int32)),
         (feature, threshold, leaf_value),
     )
     return total

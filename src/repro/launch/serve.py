@@ -2,10 +2,20 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch zamba2-1.2b \
         --reduced --batch 4 --prompt-len 64 --gen 32
+
+``--arch gbdt`` instead serves the paper's own model: train an
+asynch-SGBDT forest on the PS engine, checkpoint it mid-run and at the
+end, then answer batched raw-float prediction requests through the
+``ForestServer`` (serve-time binning + fused traversal), hot-swapping to
+the newest checkpoint between waves:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gbdt \
+        --trees 60 --requests 12 [--rows 64] [--workers 8]
 """
 from __future__ import annotations
 
 import argparse
+import tempfile
 import time
 
 import jax
@@ -19,6 +29,78 @@ from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import init_params
 
 
+def run_gbdt(args) -> None:
+    """Train -> checkpoint -> serve handoff, with a live hot swap."""
+    from repro.checkpoint import CheckpointManager
+    from repro.core.sgbdt import SGBDTConfig
+    from repro.ps import Trainer
+    from repro.serving import ForestServer, PredictRequest, load_forest_checkpoint
+    from repro.trees.binning import bin_dataset
+    from repro.trees.learner import LearnerConfig
+
+    rng = np.random.default_rng(args.seed)
+    n, dim = 2_000, 40
+    x = rng.standard_normal((n, dim)).astype(np.float32)
+    w = rng.standard_normal(dim).astype(np.float32)
+    y = (x @ w + 0.1 * rng.standard_normal(n) > 0).astype(np.float32)
+    data = bin_dataset(x, y, n_bins=64)
+
+    cfg = SGBDTConfig(
+        n_trees=args.trees,
+        step_length=0.15,
+        sampling_rate=0.8,
+        learner=LearnerConfig(depth=5, n_bins=64, feature_fraction=0.8),
+    )
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="gbdt_serve_")
+    ckpt = CheckpointManager(ckpt_dir, save_every=1, keep=4)
+    half = max(args.trees // 2, 1)
+    print(f"gbdt: training {args.trees} trees ({args.workers} PS workers), "
+          f"checkpointing steps {half} and {args.trees} -> {ckpt_dir}")
+    trainer = Trainer(cfg)
+    state = trainer.train(
+        data, ("round_robin", args.workers), seed=args.seed,
+        eval_every=half, eval_fn=lambda st, j: ckpt.maybe_save(j, st),
+    )
+    ckpt.maybe_save(args.trees, state)  # idempotent when half divides trees
+
+    # Serve from the mid-training (partially-filled) checkpoint first; the
+    # checkpoint root is attached only after the first batch so the demo
+    # shows both model versions answering live traffic.
+    server = ForestServer(
+        load_forest_checkpoint(ckpt_dir, half),
+        data.bin_edges,
+        max_rows=args.rows,
+        model_step=half,
+    )
+    reqs = [
+        PredictRequest(
+            uid=i,
+            x=rng.standard_normal((int(rng.integers(1, args.rows // 2 + 1)), dim))
+            .astype(np.float32),
+        )
+        for i in range(args.requests)
+    ]
+    t0 = time.time()
+    first = server.run(reqs[: args.requests // 2])
+    server.ckpt_root = ckpt_dir
+    swapped = server.maybe_reload()
+    second = server.run(reqs[args.requests // 2:])
+    dt = time.time() - t0
+    outs = first + second
+    rows = sum(len(r.scores) for r in outs)
+    print(f"served {len(outs)} requests / {rows} rows in {dt:.2f}s "
+          f"({rows / dt:,.0f} rows/s incl. compile) over "
+          f"{server.waves_served} waves")
+    step_before = first[-1].model_step if first else half
+    print(f"hot swap: step {step_before} -> {server.model_step} "
+          f"(reloaded={swapped})")
+    for r in outs[:3]:
+        print(f"  req {r.uid}: {len(r.scores)} rows, model_step={r.model_step}, "
+              f"scores[:4]={np.round(r.scores[:4], 4).tolist()}")
+    assert swapped and server.model_step == args.trees
+    assert all(np.isfinite(r.scores).all() for r in outs), "non-finite scores"
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b")
@@ -28,7 +110,20 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trees", type=int, default=60,
+                    help="forest size to train then serve (--arch gbdt)")
+    ap.add_argument("--workers", type=int, default=8,
+                    help="PS worker count for the training phase (--arch gbdt)")
+    ap.add_argument("--requests", type=int, default=12,
+                    help="prediction requests to serve (--arch gbdt)")
+    ap.add_argument("--rows", type=int, default=64,
+                    help="wave capacity in rows (--arch gbdt)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint directory (default: fresh tempdir)")
     args = ap.parse_args()
+
+    if args.arch == "gbdt":
+        return run_gbdt(args)
 
     cfg = configs.get(args.arch)
     if args.reduced:

@@ -7,7 +7,6 @@ paper's sampled objective), optimizer update — as one pure function of
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax
@@ -68,7 +67,9 @@ def make_train_step(
         if accum == 1:
             (loss, metrics), grads = grad_fn(params, add_weights(batch, rng))
         else:
-            split = lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+            def split(x):
+                return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+
             mbs = {k: split(v) for k, v in batch.items()}
             rngs = jax.random.split(rng, accum)
             g0 = pin(

@@ -15,7 +15,6 @@ GShard dispatch-einsum fake FLOPs.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -17,7 +17,6 @@ interleaved block types scan over *groups*:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax

@@ -132,9 +132,9 @@ def adam(
     """
 
     def init(params):
-        zeros = lambda: jax.tree.map(
-            lambda p: jnp.zeros(p.shape, jnp.float32), params
-        )
+        def zeros():
+            return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
         return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros(), nu=zeros())
 
     def update(grads, state, params):

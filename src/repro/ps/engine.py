@@ -32,7 +32,6 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.sgbdt import SGBDTConfig, TrainState, init_state
 from repro.data.sampling import bernoulli_weights

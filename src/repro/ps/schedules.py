@@ -13,7 +13,7 @@ Schedules come from three kinds of provider, all normalized here:
 """
 from __future__ import annotations
 
-from typing import Callable, Sequence
+from typing import Sequence
 
 import numpy as np
 

@@ -25,7 +25,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.sgbdt import SGBDTConfig, TrainState, init_state
 from repro.ps.engine import propose_tree, server_fold

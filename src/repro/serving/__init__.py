@@ -1,4 +1,18 @@
-"""Batched serving: request queue + wave scheduler + greedy decode."""
+"""Batched serving: request queue + wave scheduler, for decode and forests."""
 from repro.serving.engine import Completion, Request, ServingEngine
+from repro.serving.forest_server import (
+    ForestServer,
+    PredictRequest,
+    PredictResult,
+    load_forest_checkpoint,
+)
 
-__all__ = ["Completion", "Request", "ServingEngine"]
+__all__ = [
+    "Completion",
+    "Request",
+    "ServingEngine",
+    "ForestServer",
+    "PredictRequest",
+    "PredictResult",
+    "load_forest_checkpoint",
+]

@@ -1,0 +1,204 @@
+"""GBDT forest serving: raw-float requests -> binned -> fused traversal.
+
+The inference half of the paper's system: the parameter server trains a
+forest (``repro.ps``), checkpoints its ``TrainState``, and this module
+serves it. Three contracts (DESIGN.md §6a):
+
+- **Wave batching** — the queue pattern of ``serving.engine``: variable-size
+  prediction requests (each a block of rows) are packed row-wise into
+  fixed-capacity waves of ``max_rows`` and padded to ONE static shape, so
+  every wave hits the same jitted predict and there is exactly one compile.
+- **Serve-time binning** — requests carry *raw float* features; the jitted
+  predict applies the training-time quantile edges (``BinnedData.bin_edges``
+  via ``trees.binning.apply_bins``) before traversal, so serving sees
+  exactly the bins training saw.
+- **Hot swap** — between waves the server polls the checkpoint directory
+  for a newer step and swaps the forest atomically (the forest is a jit
+  *argument*, not a captured constant, so a swap is just a new pytree with
+  the same shapes: zero retrace, zero downtime).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint
+from repro.kernels import ops
+from repro.trees.binning import apply_bins
+from repro.trees.forest import Forest
+
+_FOREST_FIELDS = ("feature", "threshold", "leaf_value", "n_trees", "base_score")
+
+
+def load_forest_checkpoint(
+    root: str | pathlib.Path, step: int, like: Forest | None = None
+) -> Forest:
+    """Restore a ``Forest`` from a checkpoint written by the training loop.
+
+    Works on both bare-``Forest`` checkpoints (leaf paths ``.feature`` ...)
+    and full ``TrainState`` checkpoints (``.forest/.feature`` ...): leaves
+    are matched by their trailing field name, so the server never needs the
+    training-set-sized ``f`` vector to rebuild its template. With ``like``,
+    shapes are validated against the serving template (capacity and depth
+    are static for the jit cache).
+    """
+    d = pathlib.Path(root) / f"step_{step:06d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    found: dict[str, np.ndarray] = {}
+    for entry in manifest["leaves"]:
+        field = entry["path"].split("/")[-1].lstrip(".")
+        if field in _FOREST_FIELDS:
+            found[field] = np.load(d / entry["file"])
+    missing = [f for f in _FOREST_FIELDS if f not in found]
+    if missing:
+        raise KeyError(f"checkpoint {d} has no forest leaves {missing}")
+    forest = Forest(
+        feature=jnp.asarray(found["feature"], jnp.int32),
+        threshold=jnp.asarray(found["threshold"], jnp.int32),
+        leaf_value=jnp.asarray(found["leaf_value"], jnp.float32),
+        n_trees=jnp.asarray(found["n_trees"], jnp.int32),
+        base_score=jnp.asarray(found["base_score"], jnp.float32),
+    )
+    if like is not None:
+        for name in ("feature", "threshold", "leaf_value"):
+            got = getattr(forest, name).shape
+            want = getattr(like, name).shape
+            if got != want:
+                raise ValueError(
+                    f"{name}: checkpoint shape {got} != serving template {want}"
+                )
+    return forest
+
+
+@dataclasses.dataclass
+class PredictRequest:
+    uid: int
+    x: np.ndarray  # (n, F) float32 — raw (unbinned) feature rows
+
+
+@dataclasses.dataclass
+class PredictResult:
+    uid: int
+    scores: np.ndarray  # (n,) float32 — F(x) margins
+    model_step: int     # checkpoint step that served this request
+    latency_s: float    # wall time of the wave this request rode
+
+
+class ForestServer:
+    """Wave-batched GBDT inference with checkpoint hot-swap.
+
+    ``forest`` is the serving template (its capacity/depth fix the jit
+    shapes); ``bin_edges`` are the training-time quantile edges. With
+    ``ckpt_root``, ``maybe_reload`` (called between waves and available to
+    callers) polls ``checkpoint.latest_step`` and swaps in newer forests.
+    """
+
+    def __init__(
+        self,
+        forest: Forest,
+        bin_edges: jax.Array,
+        *,
+        ckpt_root: str | pathlib.Path | None = None,
+        max_rows: int = 256,
+        backend: str = "auto",
+        model_step: int = -1,
+    ):
+        self.forest = forest
+        self.bin_edges = jnp.asarray(bin_edges, jnp.float32)
+        self.ckpt_root = ckpt_root
+        self.max_rows = max_rows
+        self.model_step = model_step
+        self.waves_served = 0
+        depth = forest.depth
+
+        def predict(forest: Forest, edges: jax.Array, x: jax.Array) -> jax.Array:
+            bins = apply_bins(x, edges)
+            pred = ops.forest_traverse(
+                bins, forest.feature, forest.threshold, forest.leaf_value,
+                forest.n_trees, depth, backend=backend,
+            )
+            return forest.base_score + pred
+
+        self._predict = jax.jit(predict)
+        self._queue: collections.deque[PredictRequest] = collections.deque()
+
+    def submit(self, req: PredictRequest) -> None:
+        x = np.asarray(req.x, np.float32)
+        if x.ndim != 2 or x.shape[1] != self.bin_edges.shape[0]:
+            raise ValueError(
+                f"request {req.uid}: expected (n, {self.bin_edges.shape[0]}) "
+                f"features, got {x.shape}"
+            )
+        if x.shape[0] > self.max_rows:
+            raise ValueError(
+                f"request {req.uid}: {x.shape[0]} rows exceeds "
+                f"max_rows={self.max_rows}"
+            )
+        self._queue.append(req)
+
+    # ------------------------------------------------------------------ waves
+    def _next_wave(self) -> list[PredictRequest]:
+        """Pop queued requests while their rows fit in one ``max_rows`` wave."""
+        wave, rows = [], 0
+        while self._queue and rows + len(self._queue[0].x) <= self.max_rows:
+            req = self._queue.popleft()
+            wave.append(req)
+            rows += len(req.x)
+        return wave
+
+    def _run_wave(self, wave: list[PredictRequest]) -> list[PredictResult]:
+        sizes = [len(r.x) for r in wave]
+        rows = np.zeros((self.max_rows, self.bin_edges.shape[0]), np.float32)
+        rows[: sum(sizes)] = np.concatenate([r.x for r in wave], axis=0)
+        t0 = time.perf_counter()
+        scores = self._predict(self.forest, self.bin_edges, jnp.asarray(rows))
+        scores = np.asarray(jax.block_until_ready(scores))
+        dt = time.perf_counter() - t0
+        self.waves_served += 1
+        results, off = [], 0
+        for req, n in zip(wave, sizes):
+            results.append(
+                PredictResult(
+                    uid=req.uid,
+                    scores=scores[off : off + n],
+                    model_step=self.model_step,
+                    latency_s=dt,
+                )
+            )
+            off += n
+        return results
+
+    # --------------------------------------------------------------- hot swap
+    def maybe_reload(self) -> bool:
+        """Swap in the newest checkpointed forest, if any. Zero-downtime:
+        shapes are static, so the next wave just sees the new pytree."""
+        if self.ckpt_root is None:
+            return False
+        step = checkpoint.latest_step(self.ckpt_root)
+        if step is None or step <= self.model_step:
+            return False
+        self.forest = load_forest_checkpoint(self.ckpt_root, step, like=self.forest)
+        self.model_step = step
+        return True
+
+    def run(
+        self, requests: Iterable[PredictRequest] | None = None
+    ) -> list[PredictResult]:
+        for r in requests or ():
+            self.submit(r)
+        done: list[PredictResult] = []
+        while self._queue:
+            self.maybe_reload()
+            wave = self._next_wave()
+            if not wave:
+                break
+            done.extend(self._run_wave(wave))
+        return sorted(done, key=lambda r: r.uid)

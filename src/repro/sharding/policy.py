@@ -17,8 +17,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.models import cache as cache_mod
 from repro.models.config import ModelConfig
-from repro.models.transformer import Entry, param_schema, _map_schema
-from repro.sharding.rules import DEFAULT_RULES, batch_axes, spec_for
+from repro.models.transformer import param_schema, _map_schema
+from repro.sharding.rules import batch_axes, spec_for
 
 
 # ---------------------------------------------------------------- parameters

@@ -53,9 +53,14 @@ def forest_push(forest: Forest, tree: Tree, step_length: jax.Array) -> Forest:
     )
 
 
-def forest_predict(forest: Forest, bins: jax.Array) -> jax.Array:
-    """F(x) over binned inputs (N, F) -> (N,). Empty slots predict 0."""
-    pred = ops.apply_forest(
-        bins, forest.feature, forest.threshold, forest.leaf_value, forest.depth
+def forest_predict(forest: Forest, bins: jax.Array, backend: str = "auto") -> jax.Array:
+    """F(x) over binned inputs (N, F) -> (N,). Slots >= n_trees predict 0.
+
+    ``backend='auto'`` routes through the fused Pallas traversal kernel on
+    TPU and the jnp oracle elsewhere (``kernels.ops.forest_traverse``).
+    """
+    pred = ops.forest_traverse(
+        bins, forest.feature, forest.threshold, forest.leaf_value,
+        forest.n_trees, forest.depth, backend=backend,
     )
     return forest.base_score + pred

@@ -1,7 +1,6 @@
 """Loop-aware HLO analyzer: validated against programs with known costs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import analyze_hlo

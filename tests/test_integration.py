@@ -10,7 +10,7 @@ import repro.data as D
 import repro.models as M
 import repro.optim as O
 from repro.core.async_sgbdt import train_async, worker_round_robin
-from repro.core.sgbdt import SGBDTConfig, init_state, train_loss, train_serial
+from repro.core.sgbdt import SGBDTConfig, train_loss
 from repro.launch.steps import make_train_step
 from repro.launch.train import synthetic_batches
 from repro.trees.learner import LearnerConfig

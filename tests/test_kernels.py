@@ -18,7 +18,6 @@ except ModuleNotFoundError:
 
 from repro.kernels import ops, ref
 from repro.kernels.histogram import histogram_pallas
-from repro.kernels.split_scan import split_gain_pallas
 
 
 def _rand_case(key, n, f, n_bins, n_nodes, grad_dtype=jnp.float32):
@@ -224,6 +223,81 @@ def test_flash_attention_backward_matches_ref(key, b, sq, sk, h, kv, hd, causal)
     for a, b_ in zip(gp, gr):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
                                    rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------- forest traversal
+def _rand_forest_case(key, n, f, n_bins, n_trees, depth):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    n_int, n_leaf = (1 << depth) - 1, 1 << depth
+    bins = jax.random.randint(k1, (n, f), 0, n_bins, dtype=jnp.int32)
+    feat = jax.random.randint(k2, (n_trees, n_int), 0, f, dtype=jnp.int32)
+    thr = jax.random.randint(k3, (n_trees, n_int), 0, n_bins, dtype=jnp.int32)
+    leaf = jax.random.normal(k4, (n_trees, n_leaf), jnp.float32)
+    return bins, feat, thr, leaf
+
+
+FOREST_SWEEP = [
+    # (N, F, n_bins, T, depth, live)
+    (64, 4, 8, 1, 2, 1),
+    (200, 6, 16, 3, 3, 3),
+    (300, 10, 32, 17, 4, 9),      # non-multiple N -> exercises sample padding
+    (1000, 17, 64, 40, 6, 25),    # partially filled
+    (512, 8, 64, 64, 5, 0),       # nothing live -> exact zeros
+]
+
+
+@pytest.mark.parametrize("n,f,n_bins,n_trees,depth,live", FOREST_SWEEP)
+def test_forest_traverse_pallas_matches_ref(key, n, f, n_bins, n_trees, depth, live):
+    """Interpret-mode kernel is bitwise-exact vs the oracle (single tree
+    block — the serving default for any capacity <= 512)."""
+    bins, feat, thr, leaf = _rand_forest_case(key, n, f, n_bins, n_trees, depth)
+    nt = jnp.asarray(live, jnp.int32)
+    out_ref = ref.forest_traverse_ref(bins, feat, thr, leaf, nt, depth)
+    out_pal = ops.forest_traverse(bins, feat, thr, leaf, nt, depth, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(out_ref), np.asarray(out_pal))
+
+
+def test_forest_traverse_pallas_block_shapes(key):
+    """Result must be invariant to tiling; cross-tree-block accumulation is
+    float-rounded, so multi-block tilings match to f32 tolerance."""
+    from repro.kernels.forest_traversal import forest_traverse_pallas
+
+    bins, feat, thr, leaf = _rand_forest_case(key, 512, 8, 32, 64, 4)
+    nt = jnp.asarray(50, jnp.int32)
+    base = ref.forest_traverse_ref(bins, feat, thr, leaf, nt, 4)
+    for sample_block, tree_block in [(128, 16), (256, 64), (512, 32)]:
+        out = forest_traverse_pallas(
+            bins, feat, thr, leaf, nt, 4,
+            sample_block=sample_block, tree_block=tree_block, interpret=True,
+        )
+        np.testing.assert_allclose(base, out, rtol=1e-5, atol=1e-5)
+
+
+def test_forest_traverse_masks_stale_slots(key):
+    """Slots >= n_trees must contribute 0 even when they hold garbage —
+    the partially-filled / hot-swap serving contract."""
+    bins, feat, thr, leaf = _rand_forest_case(key, 256, 6, 16, 12, 3)
+    live = 7
+    nt = jnp.asarray(live, jnp.int32)
+    clean = ref.forest_traverse_ref(
+        bins, feat[:live], thr[:live], leaf[:live], nt, 3
+    )
+    for backend in ("ref", "pallas"):
+        out = ops.forest_traverse(bins, feat, thr, leaf, nt, 3, backend=backend)
+        np.testing.assert_allclose(clean, out, rtol=1e-6, atol=1e-6)
+
+
+def test_forest_traverse_ref_matches_apply_forest(key):
+    """On zero-padded (training-produced) forests the masked serving sum
+    equals the unmasked train-time scan."""
+    bins, feat, thr, leaf = _rand_forest_case(key, 400, 8, 16, 10, 4)
+    live = 6
+    feat = feat.at[live:].set(0)
+    thr = thr.at[live:].set(2**30)
+    leaf = leaf.at[live:].set(0.0)
+    masked = ref.forest_traverse_ref(bins, feat, thr, leaf, live, 4)
+    unmasked = ref.apply_forest_ref(bins, feat, thr, leaf, 4)
+    np.testing.assert_allclose(masked, unmasked, rtol=1e-6, atol=1e-6)
 
 
 # -------------------------------------------------------------- apply_forest

@@ -14,12 +14,10 @@ import subprocess
 import sys
 import textwrap
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-import repro.data as D
 from repro.core.sgbdt import SGBDTConfig, train_loss, train_serial
 from repro.core.simulator import ClusterSpec
 from repro.ps import (

@@ -1,11 +1,22 @@
-"""Batched serving engine: waves, budgets, EOS, media frontends."""
+"""Batched serving engine: waves, budgets, EOS, media frontends — and the
+GBDT forest server: serve-time binning, traversal parity, checkpoint hot-swap."""
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 import repro.configs as configs
 import repro.models as M
-from repro.serving import Completion, Request, ServingEngine
+from repro.checkpoint import CheckpointManager
+from repro.serving import (
+    ForestServer,
+    PredictRequest,
+    Request,
+    ServingEngine,
+    load_forest_checkpoint,
+)
+from repro.trees import apply_bins, forest_predict
+from repro.trees.binning import bin_dataset
 
 
 @pytest.fixture(scope="module")
@@ -100,3 +111,123 @@ def test_eos_truncates():
     eng_eos = ServingEngine(cfg, params, slots=2, max_len=64, eos_id=eos)
     out = eng_eos.run([_req(0, 16, cfg, budget=8)])[0]
     assert out.tokens.shape[0] <= 3 or eos in out.tokens[:3]
+
+
+# ---------------------------------------------------------------- forest GBDT
+N_TREES, DEPTH, DIM = 8, 3, 12
+
+
+@pytest.fixture(scope="module")
+def gbdt_setup(tmp_path_factory):
+    """Raw data + forest trained on its binned form, checkpointed at steps
+    N_TREES/2 (partially-filled) and N_TREES (full)."""
+    from repro.core.sgbdt import SGBDTConfig
+    from repro.ps import Trainer
+    from repro.trees.learner import LearnerConfig
+
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((400, DIM)).astype(np.float32)
+    w = rng.standard_normal(DIM).astype(np.float32)
+    y = (x @ w > 0).astype(np.float32)
+    data = bin_dataset(x, y, n_bins=64)
+    cfg = SGBDTConfig(
+        n_trees=N_TREES, step_length=0.3, sampling_rate=0.9,
+        learner=LearnerConfig(depth=DEPTH, n_bins=64),
+    )
+    root = tmp_path_factory.mktemp("gbdt_ckpt")
+    ckpt = CheckpointManager(root, save_every=1, keep=4)
+    state = Trainer(cfg).train(
+        data, ("round_robin", 2), seed=0,
+        eval_every=N_TREES // 2, eval_fn=lambda st, j: ckpt.maybe_save(j, st),
+    )
+    return x, data, state, root
+
+
+def test_serve_time_binning_matches_training_bins(gbdt_setup):
+    """apply_bins over the training edges must reproduce the training bins
+    exactly — the serve path sees what training saw."""
+    x, data, _, _ = gbdt_setup
+    np.testing.assert_array_equal(
+        np.asarray(apply_bins(jnp.asarray(x), data.bin_edges)),
+        np.asarray(data.bins),
+    )
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_forest_server_matches_forest_predict(gbdt_setup, backend):
+    """End-to-end server scores on raw rows == forest_predict on the
+    training bins, through both traversal backends."""
+    x, data, state, _ = gbdt_setup
+    server = ForestServer(state.forest, data.bin_edges, max_rows=128,
+                          backend=backend)
+    rows = x[:100]
+    out = server.run([PredictRequest(uid=0, x=rows)])[0]
+    want = np.asarray(forest_predict(state.forest, data.bins[:100]))
+    np.testing.assert_allclose(out.scores, want, rtol=1e-6, atol=1e-6)
+
+
+def test_forest_server_wave_packing(gbdt_setup):
+    """Variable-size requests pack into max_rows waves; results keep uids
+    and per-request row counts; oversize submits are rejected."""
+    x, data, state, _ = gbdt_setup
+    server = ForestServer(state.forest, data.bin_edges, max_rows=32)
+    sizes = [10, 20, 5, 32, 1]
+    reqs = [
+        PredictRequest(uid=i, x=x[sum(sizes[:i]) : sum(sizes[: i + 1])])
+        for i in range(len(sizes))
+    ]
+    outs = server.run(reqs)
+    assert [r.uid for r in outs] == list(range(len(sizes)))
+    assert [len(r.scores) for r in outs] == sizes
+    assert server.waves_served == 4  # greedy fill: [10+20], [5], [32], [1]
+    solo = server.run([PredictRequest(uid=9, x=x[:10])])[0]
+    np.testing.assert_array_equal(solo.scores, outs[0].scores)
+    with pytest.raises(ValueError, match="max_rows"):
+        server.submit(PredictRequest(uid=99, x=x[:33]))
+    with pytest.raises(ValueError, match="features"):
+        server.submit(PredictRequest(uid=99, x=x[:4, :5]))
+
+
+def test_partially_filled_checkpoint_serves_masked(gbdt_setup):
+    """The mid-training checkpoint (n_trees=4 of capacity 8) must predict
+    with only its live trees."""
+    x, data, state, root = gbdt_setup
+    half = load_forest_checkpoint(root, N_TREES // 2, like=state.forest)
+    assert int(half.n_trees) == N_TREES // 2
+    server = ForestServer(half, data.bin_edges, max_rows=64)
+    out = server.run([PredictRequest(uid=0, x=x[:64])])[0]
+    want = np.asarray(forest_predict(half, data.bins[:64]))
+    np.testing.assert_allclose(out.scores, want, rtol=1e-6, atol=1e-6)
+    full = np.asarray(forest_predict(state.forest, data.bins[:64]))
+    assert not np.allclose(out.scores, full)  # the swap visibly changes scores
+
+
+def test_checkpoint_hot_swap_roundtrip(gbdt_setup):
+    """Server boots on the old step, polls the root, swaps to the newest
+    checkpoint between waves, and serves the new model's scores."""
+    x, data, state, root = gbdt_setup
+    half = load_forest_checkpoint(root, N_TREES // 2)
+    server = ForestServer(
+        half, data.bin_edges, ckpt_root=root, max_rows=64,
+        model_step=N_TREES // 2,
+    )
+    assert server.maybe_reload()
+    assert server.model_step == N_TREES
+    assert not server.maybe_reload()  # idempotent: nothing newer
+    out = server.run([PredictRequest(uid=0, x=x[:64])])[0]
+    assert out.model_step == N_TREES
+    want = np.asarray(forest_predict(state.forest, data.bins[:64]))
+    np.testing.assert_allclose(out.scores, want, rtol=1e-6, atol=1e-6)
+
+
+def test_load_forest_checkpoint_bare_forest(gbdt_setup, tmp_path):
+    """Bare-Forest checkpoints (no TrainState wrapper) restore too."""
+    from repro.checkpoint import save_pytree
+
+    x, data, state, _ = gbdt_setup
+    save_pytree(tmp_path, 3, state.forest)
+    forest = load_forest_checkpoint(tmp_path, 3, like=state.forest)
+    np.testing.assert_array_equal(
+        np.asarray(forest.leaf_value), np.asarray(state.forest.leaf_value)
+    )
+    assert int(forest.n_trees) == int(state.forest.n_trees)

@@ -10,7 +10,7 @@ from jax.sharding import PartitionSpec as P
 import repro.configs as configs
 import repro.sharding as SH
 from repro.launch.shapes import SHAPES, shape_skip_reason
-from repro.models.transformer import Entry, _map_schema, param_schema
+from repro.models.transformer import _map_schema, param_schema
 
 
 @dataclasses.dataclass
