@@ -43,14 +43,17 @@ def e2006_like(quick: bool = True):
 
 
 def paper_cfg(n_trees: int, depth: int, loss: str = "logistic",
-              sampling_rate: float = 0.8, step: float = 0.1) -> SGBDTConfig:
+              sampling_rate: float = 0.8, step: float = 0.1,
+              objective: str | None = None) -> SGBDTConfig:
     """The paper's validity-experiment settings, scaled: 400 trees / 100
-    leaves -> quick variants keep the same ratios."""
+    leaves -> quick variants keep the same ratios. ``objective`` takes any
+    registry spec and supersedes the legacy ``loss`` string."""
     return SGBDTConfig(
         n_trees=n_trees,
         step_length=step,
         sampling_rate=sampling_rate,
         loss=loss,
+        objective=objective,
         learner=LearnerConfig(depth=depth, n_bins=64, feature_fraction=0.8),
     )
 

@@ -32,36 +32,48 @@ from repro.core.simulator import ClusterSpec, simulate_async, simulate_sync
 from repro.core.sgbdt import init_state
 from repro.data.sampling import bernoulli_weights
 from repro.ps.worker import build_trees_batched
-from repro.trees.learner import build_tree
-from repro.trees.tree import apply_tree
+from repro.trees.learner import build_tree, build_tree_multi
+from repro.trees.tree import apply_tree, apply_tree_stack
 
 WORKERS = [1, 2, 4, 8, 16, 32]
-GBE_BYTES_PER_S = 110e6          # ~1 GbE effective
+GBE_BYTES_PER_S = 110e6  # ~1 GbE effective
 
 
 def measure_components(cfg, data) -> dict:
     key = jax.random.PRNGKey(0)
+    obj = cfg.obj
+    k_out = obj.n_outputs
     state = init_state(cfg, data)
-    g, h = cfg.grad_hess(data.labels, state.f)
+    g, h = obj.grad_hess(data.labels, state.f, qid=data.qid)
     m_prime, _ = bernoulli_weights(key, cfg.sampling_rate, data.multiplicity)
 
-    t_build, tree = time_call(
-        lambda: build_tree(cfg.learner, data.bins, m_prime * g, m_prime, key)
-    )
+    if k_out == 1:
+        t_build, tree = time_call(
+            lambda: build_tree(cfg.learner, data.bins, m_prime * g, m_prime, key)
+        )
+        apply_fn = apply_tree
+    else:
+        t_build, tree = time_call(
+            lambda: build_tree_multi(
+                cfg.learner, data.bins, m_prime[:, None] * g,
+                jnp.broadcast_to(m_prime[:, None], g.shape), key,
+            )
+        )
+        apply_fn = apply_tree_stack
 
     def server_side():
         mp, _ = bernoulli_weights(key, cfg.sampling_rate, data.multiplicity)
-        gg, _ = cfg.grad_hess(data.labels, state.f)
-        return state.f + cfg.step_length * apply_tree(tree, data.bins), mp, gg
+        gg, _ = obj.grad_hess(data.labels, state.f, qid=data.qid)
+        return state.f + cfg.step_length * apply_fn(tree, data.bins), mp, gg
 
     t_server, _ = time_call(jax.jit(server_side))
 
-    # tree payload: feature/threshold int32 + leaf f32
+    # tree payload: feature/threshold int32 + leaf f32, x K trees per round
     n_int = tree.feature.shape[-1]
     n_leaf = tree.leaf_value.shape[-1]
-    tree_bytes = 4 * (2 * n_int + n_leaf)
-    # pull payload: the target vector L'_random (N floats)
-    pull_bytes = 4 * data.n_samples
+    tree_bytes = 4 * (2 * n_int + n_leaf) * k_out
+    # pull payload: the target field L'_random (N x K floats)
+    pull_bytes = 4 * data.n_samples * k_out
     t_comm = (tree_bytes + pull_bytes) / GBE_BYTES_PER_S
     return {
         "t_build": t_build,
@@ -80,12 +92,12 @@ def measure_worker_parallel(cfg, data, workers: list[int]) -> list[float]:
 
     t_one, _ = time_call(
         jax.jit(lambda k: build_trees_batched(
-            cfg, data, state.f[None, :], k)),
+            cfg, data, state.f[None, ...], k)),
         jax.random.split(key, 1),
     )
     out = []
     for w in workers:
-        targets = jnp.broadcast_to(state.f, (w, state.f.shape[0]))
+        targets = jnp.broadcast_to(state.f, (w,) + state.f.shape)
         t_blk, _ = time_call(
             jax.jit(lambda k, t: build_trees_batched(cfg, data, t, k)),
             jax.random.split(key, w), targets,
@@ -94,14 +106,34 @@ def measure_worker_parallel(cfg, data, workers: list[int]) -> list[float]:
     return out
 
 
-def run(quick: bool = True) -> dict:
+def _objective_dataset(objective: str, quick: bool):
+    """(tag, data) for a requested --objective override — the launch
+    driver's shared objective -> workload dispatch, benchmark-sized."""
+    from repro.launch.train import gbdt_dataset_for
+
+    obj, data = gbdt_dataset_for(objective, seed=7, n=1_600 if quick else 6_400)
+    tag = obj.name if obj.n_outputs == 1 else f"{obj.name}{obj.n_outputs}"
+    return tag, data
+
+
+def run(quick: bool = True, objective: str | None = None) -> dict:
+    """Default: the paper's two workloads. With ``objective``, the same
+    speedup measurement on that objective's matched workload — the paper's
+    scalability claim checked beyond binary classification (multiclass
+    rounds build K trees per push; the measured vmapped-pool ratio and the
+    Eq. 13 model both see the bigger build/comm payloads)."""
     n_trees = 150 if quick else 400
-    out: dict = {"workers": WORKERS, "datasets": {}}
-    for tag, data, depth, loss in [
-        ("realsim", realsim_like(quick), 6, "logistic"),
-        ("e2006", e2006_like(quick), 6, "mse"),
-    ]:
-        cfg = paper_cfg(n_trees, depth, loss=loss)
+    if objective is None:
+        cases = [
+            ("realsim", realsim_like(quick), 6, "logistic"),
+            ("e2006", e2006_like(quick), 6, "mse"),
+        ]
+    else:
+        tag, data = _objective_dataset(objective, quick)
+        cases = [(tag, data, 6, objective)]
+    out: dict = {"workers": WORKERS, "objective": objective, "datasets": {}}
+    for tag, data, depth, loss in cases:
+        cfg = paper_cfg(n_trees, depth, objective=loss)
         comp = measure_components(cfg, data)
         print(f"  {tag}: t_build={comp['t_build']*1e3:.1f}ms "
               f"t_server={comp['t_server']*1e3:.1f}ms "
@@ -157,15 +189,24 @@ def run(quick: bool = True) -> dict:
         print(f"  {tag} @32w: async {rows['async_sim'][-1]:.1f}x "
               f"sync {rows['sync_sim'][-1]:.1f}x dimboost {rows['dimboost_sim'][-1]:.1f}x",
               flush=True)
-    save("fig10_speedup", out)
+    name = "fig10_speedup" if objective is None else f"fig10_speedup_{objective.replace(':', '')}"
+    save(name, out)
     return out
 
 
-def main(quick: bool = True):
-    res = run(quick)
+def main(quick: bool = True, objective: str | None = None):
+    res = run(quick, objective=objective)
     print("\npaper targets @32: async 14-20x, LightGBM 5-7x, DimBoost 4-6x")
     return res
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--objective", default=None,
+                    help="objective registry spec (e.g. multiclass:3, "
+                         "lambdarank); default = the paper's two workloads")
+    a = ap.parse_args()
+    main(quick=not a.full, objective=a.objective)

@@ -25,8 +25,8 @@ CASES = [
 def hist_intensity(n, f, n_bins, n_nodes, sample_block=512, feature_block=8):
     """Analytic FLOPs/bytes per histogram kernel invocation (MXU path)."""
     rows = 2 * n_nodes
-    flops = 2.0 * rows * n * f * n_bins          # dense one-hot contraction
-    bytes_in = n * f * 4 + 3 * n * 4             # bins + node/grad/hess
+    flops = 2.0 * rows * n * f * n_bins  # dense one-hot contraction
+    bytes_in = n * f * 4 + 3 * n * 4  # bins + node/grad/hess
     bytes_out = rows * f * n_bins * 4
     return flops, bytes_in + bytes_out
 

@@ -43,7 +43,7 @@ def load(mesh: str = "single") -> list[dict]:
                          "reason": rec.get("reason", rec.get("error", ""))})
             continue
         row = {"arch": rec["arch"], "shape": rec["shape"], "status": "ok"}
-        row.update(terms(rec))            # includes the bottleneck 'note'
+        row.update(terms(rec))  # includes the bottleneck 'note'
         rows.append(row)
     return rows
 

@@ -14,10 +14,10 @@ import repro.data as D
 from repro.checkpoint import CheckpointManager
 from repro.core.sgbdt import SGBDTConfig, train_loss
 from repro.core.simulator import ClusterSpec, simulate_async
+from repro.objectives import get_objective
 from repro.ps import Trainer
 from repro.trees import forest_predict
 from repro.trees.learner import LearnerConfig
-from repro.trees.losses import sigmoid2
 
 
 def main():
@@ -30,6 +30,9 @@ def main():
     ap.add_argument("--full", action="store_true",
                     help="paper scale: 400 trees, 512-leaf trees")
     ap.add_argument("--ckpt", default="experiments/ckpt_gbdt")
+    ap.add_argument("--objective", default="logistic",
+                    help="objective registry spec (see repro.objectives); "
+                         "this example's dataset/accuracy is binary")
     args = ap.parse_args()
     if args.full:
         args.trees, args.depth = 400, 9
@@ -45,8 +48,10 @@ def main():
     )
     te_bins, te_y = data_all.bins[n_tr:], np.asarray(data_all.labels[n_tr:])
 
+    obj = get_objective(args.objective)
     cfg = SGBDTConfig(
         n_trees=args.trees, step_length=args.step, sampling_rate=args.rate,
+        objective=args.objective,
         learner=LearnerConfig(depth=args.depth, n_bins=64, feature_fraction=0.8),
     )
 
@@ -65,7 +70,7 @@ def main():
 
     def on_eval(st, j):
         tr_loss = float(train_loss(cfg, tr, st))
-        pred = sigmoid2(forest_predict(st.forest, te_bins))
+        pred = obj.link(forest_predict(st.forest, te_bins))
         acc = float(np.mean((np.asarray(pred) > 0.5) == te_y))
         print(f"  tree {j:4d}: train loss {tr_loss:.4f}  test acc {acc:.3f}")
         mgr.maybe_save(j, st._asdict())
@@ -77,7 +82,7 @@ def main():
     print(f"trained {args.trees} trees in {time.time()-t0:.1f}s "
           f"(CPU; schedule from the simulated cluster)")
 
-    pred = sigmoid2(forest_predict(state.forest, te_bins))
+    pred = obj.link(forest_predict(state.forest, te_bins))
     acc = float(np.mean((np.asarray(pred) > 0.5) == te_y))
     print(f"final test accuracy: {acc:.3f}")
     step, restored = mgr.restore_latest(state._asdict())

@@ -50,7 +50,7 @@ def save_pytree(root: str | pathlib.Path, step: int, tree, *, crc: bool = True):
         arr = np.asarray(leaf)
         fname = f"leaf_{i:05d}.npy"
         logical_dtype = str(arr.dtype)
-        if logical_dtype == "bfloat16":   # numpy can't round-trip ml_dtypes
+        if logical_dtype == "bfloat16":  # numpy can't round-trip ml_dtypes
             np.save(tmp / fname, arr.view(np.uint16))
         else:
             np.save(tmp / fname, arr)

@@ -15,6 +15,6 @@ CONFIG = ModelConfig(
     head_dim=80,
     d_ff=6912,
     vocab_size=32000,
-    sliding_window=4096,   # native SWA => long_500k runs as-is
+    sliding_window=4096,  # native SWA => long_500k runs as-is
     rope_theta=10_000.0,
 )

@@ -17,7 +17,7 @@ CONFIG = ModelConfig(
     d_ff=28672,
     vocab_size=128256,
     cross_attn_every=5,
-    n_media_tokens=1601,    # 1 tile x (40x40 + 1) patches from the ViT stub
+    n_media_tokens=1601,  # 1 tile x (40x40 + 1) patches from the ViT stub
     rope_theta=500_000.0,
     long_context_window=8192,
 )

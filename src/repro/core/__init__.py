@@ -13,7 +13,15 @@
 - ``baselines``: synchronous fork-join SGBDT (LightGBM-style) and
   DimBoost-style centralized aggregation timing models.
 """
-from repro.core.sgbdt import SGBDTConfig, TrainState, init_state, train_serial, sgbdt_round
+from repro.core.sgbdt import (
+    SGBDTConfig,
+    TrainState,
+    init_state,
+    sgbdt_round,
+    train_loss,
+    train_metrics,
+    train_serial,
+)
 from repro.core.async_sgbdt import (
     constant_delay,
     max_staleness,
@@ -33,6 +41,8 @@ __all__ = [
     "TrainState",
     "init_state",
     "train_serial",
+    "train_loss",
+    "train_metrics",
     "sgbdt_round",
     "constant_delay",
     "max_staleness",

@@ -53,8 +53,8 @@ def train_async(
 def train_async_scan(
     cfg: SGBDTConfig,
     data: BinnedData,
-    schedule: jax.Array,    # (T,) int32
-    rngs: jax.Array,        # (T, 2) keys
+    schedule: jax.Array,  # (T,) int32
+    rngs: jax.Array,  # (T, 2) keys
     ring_size: int,
 ) -> tuple[TrainState, jax.Array]:
     """Whole training run as one scan; returns per-round train loss too."""

@@ -14,16 +14,19 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.objectives import Objective, get_objective
 from repro.trees.binning import BinnedData
 from repro.trees.forest import Forest, empty_forest
 from repro.trees.learner import LearnerConfig
-from repro.trees.losses import LOSSES
 
 
 class SGBDTConfig(NamedTuple):
-    n_trees: int = 400
-    step_length: float = 0.01       # the paper's v
-    sampling_rate: float = 0.8      # uniform R_ij (paper's efficiency setting)
+    n_trees: int = 400  # boosting rounds (x n_outputs trees each)
+    step_length: float = 0.01  # the paper's v
+    sampling_rate: float = 0.8  # uniform R_ij (paper's efficiency setting)
+    # DEPRECATED shim: legacy string losses ("logistic" | "mse") resolve
+    # through the Objective registry. Prefer ``objective``, which wins
+    # whenever set.
     loss: str = "logistic"
     learner: LearnerConfig = LearnerConfig()
     # 'gradient' — the paper's step (leaf = mean sampled gradient; the only
@@ -32,37 +35,52 @@ class SGBDTConfig(NamedTuple):
     # tests the paper's counter-intuitive conclusion 2 ("xgboost cannot be
     # modified into asynch-parallel manner").
     step_kind: str = "gradient"
+    # First-class objective: an Objective instance or a registry spec
+    # string ("multiclass:3", "quantile:0.9", "lambdarank", ...).
+    objective: Objective | str | None = None
+
+    @property
+    def obj(self) -> Objective:
+        return get_objective(self.objective if self.objective is not None else self.loss)
+
+    @property
+    def n_outputs(self) -> int:
+        return self.obj.n_outputs
 
     @property
     def grad_hess(self) -> Callable:
-        return LOSSES[self.loss][1]
+        return self.obj.grad_hess
 
     @property
     def loss_fn(self) -> Callable:
-        return LOSSES[self.loss][0]
+        return self.obj.loss
 
 
 class TrainState(NamedTuple):
     forest: Forest
-    f: jax.Array          # (N,) current predictions on the train set
-    step: jax.Array       # () int32 — server update counter j
+    f: jax.Array  # (N,) — or (N, K) — current train-set predictions
+    step: jax.Array  # () int32 — server update counter j
 
 
 def init_state(cfg: SGBDTConfig, data: BinnedData) -> TrainState:
-    """Server init: the paper's constant tree = weighted prior.
+    """Server init: the paper's constant tree = the objective's prior.
 
-    For logistic loss the optimal constant under p = sigmoid(2F) is
-    F0 = 0.5 * log(ybar / (1 - ybar)); for MSE it's the weighted mean.
+    ``Objective.init_score`` owns the constant fit: prior log-odds for
+    logistic, the multiplicity-weighted label mean for squared error, log
+    class priors (K,) for multiclass, the weighted label quantile for
+    pinball, zero for ranking.
     """
-    m = data.multiplicity
-    ybar = jnp.sum(m * data.labels) / jnp.sum(m)
-    if cfg.loss == "logistic":
-        ybar = jnp.clip(ybar, 1e-6, 1.0 - 1e-6)
-        base = 0.5 * jnp.log(ybar / (1.0 - ybar))
+    obj = cfg.obj
+    base = obj.init_score(data.labels, data.multiplicity)
+    forest = empty_forest(
+        cfg.n_trees, cfg.learner.depth, base_score=base, n_outputs=obj.n_outputs
+    )
+    if obj.n_outputs == 1:
+        f = jnp.full((data.n_samples,), base, jnp.float32)
     else:
-        base = ybar
-    forest = empty_forest(cfg.n_trees, cfg.learner.depth, base_score=base)
-    f = jnp.full((data.n_samples,), base, jnp.float32)
+        f = jnp.broadcast_to(
+            jnp.asarray(base, jnp.float32), (data.n_samples, obj.n_outputs)
+        )
     return TrainState(forest=forest, f=f, step=jnp.asarray(0, jnp.int32))
 
 
@@ -71,8 +89,8 @@ def sgbdt_round(
     cfg: SGBDTConfig,
     data: BinnedData,
     state: TrainState,
-    f_target: jax.Array,   # (N,) the F the *target* is computed from —
-    rng: jax.Array,        #      equals state.f serially, stale when async
+    f_target: jax.Array,  # (N,) the F the *target* is computed from —
+    rng: jax.Array,  #      equals state.f serially, stale when async
 ) -> TrainState:
     """One boosting round: sample Q -> build target -> build tree -> fold in.
 
@@ -109,4 +127,9 @@ def train_serial(
 
 
 def train_loss(cfg: SGBDTConfig, data: BinnedData, state: TrainState) -> jax.Array:
-    return cfg.loss_fn(data.labels, state.f, data.multiplicity)
+    return cfg.obj.loss(data.labels, state.f, data.multiplicity, qid=data.qid)
+
+
+def train_metrics(cfg: SGBDTConfig, data: BinnedData, state: TrainState) -> dict:
+    """The objective's scalar diagnostics on the training set."""
+    return cfg.obj.metrics(data.labels, state.f, data.multiplicity, qid=data.qid)

@@ -20,18 +20,18 @@ import numpy as np
 @dataclasses.dataclass(frozen=True)
 class ClusterSpec:
     n_workers: int
-    t_build: float              # mean tree-build time, reference worker (s)
-    t_comm: float               # mean pull+push time per tree (s)
-    t_server: float             # server: sample + target + fold per update (s)
-    build_cv: float = 0.15      # lognormal per-build jitter
-    comm_cv: float = 0.5        # network instability
+    t_build: float  # mean tree-build time, reference worker (s)
+    t_comm: float  # mean pull+push time per tree (s)
+    t_server: float  # server: sample + target + fold per update (s)
+    build_cv: float = 0.15  # lognormal per-build jitter
+    comm_cv: float = 0.5  # network instability
     speed_spread: float = 0.25  # per-worker speed multiplier ~ LogN(0, spread)
     seed: int = 0
 
 
 @dataclasses.dataclass
 class SimResult:
-    schedule: np.ndarray        # (n_trees,) k(j)
+    schedule: np.ndarray  # (n_trees,) k(j)
     makespan: float
     mean_staleness: float
     max_staleness: int
@@ -97,7 +97,7 @@ def simulate_sync(
     spec: ClusterSpec,
     n_trees: int,
     parallel_fraction: float = 0.9,
-    comm_model: str = "allreduce",   # 'allreduce' (LightGBM) | 'central' (DimBoost)
+    comm_model: str = "allreduce",  # 'allreduce' (LightGBM) | 'central' (DimBoost)
 ) -> float:
     """Fork-join makespan: every round barriers on the slowest worker.
 

@@ -2,6 +2,8 @@
 from repro.data.synthetic import (
     DatasetSpec,
     make_dense_low_diversity,
+    make_multiclass_classification,
+    make_ranking,
     make_sparse_classification,
     make_sparse_regression,
     PAPER_DATASETS,
@@ -16,6 +18,8 @@ from repro.data.sampling import (
 __all__ = [
     "DatasetSpec",
     "make_dense_low_diversity",
+    "make_multiclass_classification",
+    "make_ranking",
     "make_sparse_classification",
     "make_sparse_regression",
     "PAPER_DATASETS",

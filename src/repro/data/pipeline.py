@@ -79,8 +79,8 @@ class TokenPipeline:
     contract a production loop needs.
     """
 
-    tokens: np.ndarray          # (N, S+1) int32 — +1 for the shifted labels
-    batch_size: int             # per-shard batch
+    tokens: np.ndarray  # (N, S+1) int32 — +1 for the shifted labels
+    batch_size: int  # per-shard batch
     seed: int = 0
     shard_id: int = 0
     num_shards: int = 1

@@ -22,10 +22,10 @@ from repro.trees.binning import BinnedData, bin_dataset
 @dataclasses.dataclass(frozen=True)
 class DatasetSpec:
     name: str
-    kind: str            # 'sparse-cls' | 'dense-lowdiv' | 'sparse-reg'
-    n: int               # number of distinct samples
+    kind: str  # 'sparse-cls' | 'dense-lowdiv' | 'sparse-reg'
+    n: int  # number of distinct samples
     dim: int
-    nnz: int             # nonzeros per sample (sparse kinds)
+    nnz: int  # nonzeros per sample (sparse kinds)
     n_distinct: int = 0  # dense-lowdiv: pool of distinct samples
     loss: str = "logistic"
     seed: int = 0
@@ -66,6 +66,57 @@ def make_dense_low_diversity(
     raw = 1.0 / np.arange(1, n_distinct + 1)
     m = np.maximum(1, np.round(raw / raw.sum() * total_mass)).astype(np.float32)
     return bin_dataset(x, y, n_bins=64, multiplicity=m)
+
+
+def make_multiclass_classification(
+    n: int,
+    dim: int,
+    n_classes: int,
+    seed: int = 0,
+    sep: float = 1.5,
+    label_noise: float = 0.05,
+) -> BinnedData:
+    """Gaussian-blob multiclass set; labels are class ids stored as floats.
+
+    Pairs with ``objectives.MulticlassSoftmax(n_classes)``: one tree per
+    class per boosting round against the (N, K) softmax gradient field.
+    """
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((n_classes, dim)).astype(np.float32) * sep
+    y = rng.integers(0, n_classes, size=n)
+    x = centers[y] + rng.standard_normal((n, dim)).astype(np.float32)
+    flip = rng.random(n) < label_noise
+    y = np.where(flip, rng.integers(0, n_classes, size=n), y)
+    return bin_dataset(x, y.astype(np.float32), n_bins=64)
+
+
+def make_ranking(
+    n_queries: int,
+    docs_per_query: int,
+    dim: int,
+    seed: int = 0,
+    n_levels: int = 3,
+    noise: float = 0.25,
+) -> BinnedData:
+    """Query-grouped ranking set: labels are relevance grades 0..n_levels-1,
+    ``qid`` carries the per-sample query id for pairwise objectives.
+
+    Relevance is the within-query rank of a noisy linear utility, bucketed
+    into ``n_levels`` grades — so features are predictive of ordering but
+    no grade is globally separable.
+    """
+    rng = np.random.default_rng(seed)
+    n = n_queries * docs_per_query
+    x = rng.standard_normal((n, dim)).astype(np.float32)
+    w = rng.standard_normal(dim).astype(np.float32)
+    util = (x @ w + noise * rng.standard_normal(n)).astype(np.float32)
+    qid = np.repeat(np.arange(n_queries, dtype=np.int32), docs_per_query)
+    rel = np.empty(n, np.float32)
+    for q in range(n_queries):
+        sl = slice(q * docs_per_query, (q + 1) * docs_per_query)
+        order = np.argsort(np.argsort(util[sl]))  # 0 = worst in query
+        rel[sl] = order * n_levels // docs_per_query  # grades 0..n_levels-1
+    return bin_dataset(x, rel, n_bins=64, qid=qid)
 
 
 def make_sparse_regression(n: int, dim: int, nnz: int, seed: int = 0) -> BinnedData:

@@ -26,14 +26,14 @@ NEG_INF = -1e30
 
 
 def _flash_kernel(
-    q_ref,      # (1, bq, d)
-    k_ref,      # (1, bk, d)
-    v_ref,      # (1, bk, d)
-    o_ref,      # (1, bq, d)
-    lse_ref,    # (1, bq) f32 — per-row logsumexp, saved for the backward
-    acc_ref,    # VMEM scratch (bq, d) f32
-    m_ref,      # VMEM scratch (bq,) f32
-    l_ref,      # VMEM scratch (bq,) f32
+    q_ref,  # (1, bq, d)
+    k_ref,  # (1, bk, d)
+    v_ref,  # (1, bk, d)
+    o_ref,  # (1, bq, d)
+    lse_ref,  # (1, bq) f32 — per-row logsumexp, saved for the backward
+    acc_ref,  # VMEM scratch (bq, d) f32
+    m_ref,  # VMEM scratch (bq,) f32
+    l_ref,  # VMEM scratch (bq,) f32
     *,
     causal: bool,
     block_q: int,
@@ -58,12 +58,12 @@ def _flash_kernel(
     )
 
     def compute():
-        q = q_ref[0]                                   # (bq, d)
+        q = q_ref[0]  # (bq, d)
         k = k_ref[0]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
-        ) * sm_scale                                   # (bq, bk)
+        ) * sm_scale  # (bq, bk)
         valid = k_pos < seq_k
         if causal:
             valid &= q_pos >= k_pos
@@ -71,8 +71,8 @@ def _flash_kernel(
 
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
-        alpha = jnp.exp(m_prev - m_new)                # (bq,)
-        p = jnp.exp(s - m_new[:, None])                # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)  # (bq,)
+        p = jnp.exp(s - m_new[:, None])  # (bq, bk)
         p = jnp.where(valid, p, 0.0)
         l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
         acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
@@ -103,15 +103,15 @@ def _flash_kernel(
     ),
 )
 def flash_attention_pallas(
-    q: jax.Array,      # (BH, Sq, d) — batch*heads flattened
-    k: jax.Array,      # (BKV, Sk, d) — batch*kv_heads flattened
+    q: jax.Array,  # (BH, Sq, d) — batch*heads flattened
+    k: jax.Array,  # (BKV, Sk, d) — batch*kv_heads flattened
     v: jax.Array,
     causal: bool = True,
     block_q: int = 128,
     block_k: int = 128,
-    group: int = 1,    # q heads per kv head (GQA); BH = BKV * group
+    group: int = 1,  # q heads per kv head (GQA); BH = BKV * group
     interpret: bool = True,
-    seq_k: int | None = None,   # true (pre-padding) kv length for masking
+    seq_k: int | None = None,  # true (pre-padding) kv length for masking
 ) -> jax.Array:
     bh, sq, d = q.shape
     bkv, sk, _ = k.shape

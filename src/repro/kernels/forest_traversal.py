@@ -35,15 +35,16 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _traverse_kernel(
-    bins_ref,   # (S_blk, F) int32
-    feat_ref,   # (n_int, T_blk) int32 — transposed tree arrays
-    thr_ref,    # (n_int, T_blk) int32
-    leaf_ref,   # (n_leaf, T_blk) f32
+    bins_ref,  # (S_blk, F) int32
+    feat_ref,  # (n_int, T_blk) int32 — transposed tree arrays
+    thr_ref,  # (n_int, T_blk) int32
+    leaf_ref,  # (n_leaf, T_blk) f32
     ntree_ref,  # (1, 1) int32 in SMEM — live-slot count
-    out_ref,    # (S_blk, 1) f32 — accumulated over tree blocks
+    out_ref,  # (S_blk, n_outputs) f32 — accumulated over tree blocks
     *,
     depth: int,
     tree_block: int,
+    n_outputs: int,
 ):
     tb = pl.program_id(1)
 
@@ -59,9 +60,9 @@ def _traverse_kernel(
     # Depth-unrolled heap descent, all (sample, tree) pairs at once.
     node = jnp.zeros((s_blk, tree_block), jnp.int32)
     for _ in range(depth):
-        f = jnp.take_along_axis(feat, node, axis=0)   # (S, T) split features
-        t = jnp.take_along_axis(thr, node, axis=0)    # (S, T) split bins
-        v = jnp.take_along_axis(bins, f, axis=1)      # (S, T) sample bins
+        f = jnp.take_along_axis(feat, node, axis=0)  # (S, T) split features
+        t = jnp.take_along_axis(thr, node, axis=0)  # (S, T) split bins
+        v = jnp.take_along_axis(bins, f, axis=1)  # (S, T) sample bins
         node = 2 * node + 1 + (v > t).astype(jnp.int32)
 
     leaf = node - ((1 << depth) - 1)
@@ -70,25 +71,39 @@ def _traverse_kernel(
         jnp.int32, vals.shape, 1
     )
     vals = jnp.where(tree_idx < ntree_ref[0, 0], vals, 0.0)
-    out_ref[...] += jnp.sum(vals, axis=1, keepdims=True)
+    if n_outputs == 1:
+        out_ref[...] += jnp.sum(vals, axis=1, keepdims=True)
+    else:
+        # Slot t belongs to output t % K (round-major/output-minor forest
+        # layout): K masked on-chip reductions into the (S, K) accumulator.
+        out_k = tree_idx % n_outputs
+        out_ref[...] += jnp.stack(
+            [
+                jnp.sum(jnp.where(out_k == k, vals, 0.0), axis=1)
+                for k in range(n_outputs)
+            ],
+            axis=1,
+        )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("depth", "sample_block", "tree_block", "interpret"),
+    static_argnames=("depth", "sample_block", "tree_block", "interpret", "n_outputs"),
 )
 def forest_traverse_pallas(
-    bins: jax.Array,        # (N, F) int32 — N % sample_block == 0 (wrapper pads)
-    feature: jax.Array,     # (T, 2^d - 1) int32 — T % tree_block == 0
-    threshold: jax.Array,   # (T, 2^d - 1) int32
+    bins: jax.Array,  # (N, F) int32 — N % sample_block == 0 (wrapper pads)
+    feature: jax.Array,  # (T, 2^d - 1) int32 — T % tree_block == 0
+    threshold: jax.Array,  # (T, 2^d - 1) int32
     leaf_value: jax.Array,  # (T, 2^d) f32
-    n_trees: jax.Array,     # () int32 — live slots; slots >= n_trees add 0
+    n_trees: jax.Array,  # () int32 — live slots; slots >= n_trees add 0
     depth: int,
     sample_block: int = 256,
     tree_block: int = 512,
     interpret: bool = True,
+    n_outputs: int = 1,
 ) -> jax.Array:
-    """Masked forest sum (N,) f32. See module docstring."""
+    """Masked forest sum (N,) f32 — or (N, K) with ``n_outputs`` = K > 1,
+    where slot t reduces into output column t % K. See module docstring."""
     n, f = bins.shape
     t, n_int = feature.shape
     n_leaf = leaf_value.shape[1]
@@ -97,7 +112,12 @@ def forest_traverse_pallas(
     ns, nt = n // sample_block, t // tree_block
 
     out = pl.pallas_call(
-        functools.partial(_traverse_kernel, depth=depth, tree_block=tree_block),
+        functools.partial(
+            _traverse_kernel,
+            depth=depth,
+            tree_block=tree_block,
+            n_outputs=n_outputs,
+        ),
         grid=(ns, nt),
         in_specs=[
             pl.BlockSpec((sample_block, f), lambda sb, tb: (sb, 0)),
@@ -106,8 +126,8 @@ def forest_traverse_pallas(
             pl.BlockSpec((n_leaf, tree_block), lambda sb, tb: (0, tb)),
             pl.BlockSpec((1, 1), lambda sb, tb: (0, 0), memory_space=pltpu.SMEM),
         ],
-        out_specs=pl.BlockSpec((sample_block, 1), lambda sb, tb: (sb, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        out_specs=pl.BlockSpec((sample_block, n_outputs), lambda sb, tb: (sb, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n_outputs), jnp.float32),
         interpret=interpret,
     )(
         bins,
@@ -116,4 +136,4 @@ def forest_traverse_pallas(
         leaf_value.T,
         jnp.asarray(n_trees, jnp.int32).reshape(1, 1),
     )
-    return out[:, 0]
+    return out[:, 0] if n_outputs == 1 else out

@@ -25,11 +25,11 @@ from jax.experimental import pallas as pl
 
 
 def _hist_kernel(
-    bins_ref,   # (S_blk, F_blk) int32
-    node_ref,   # (S_blk, 1) int32, -1 = inactive
-    grad_ref,   # (S_blk, 1) f32
-    hess_ref,   # (S_blk, 1) f32
-    out_ref,    # (2*L, F_blk*B) f32
+    bins_ref,  # (S_blk, F_blk) int32
+    node_ref,  # (S_blk, 1) int32, -1 = inactive
+    grad_ref,  # (S_blk, 1) f32
+    hess_ref,  # (S_blk, 1) f32
+    out_ref,  # (2*L, F_blk*B) f32
     *,
     n_nodes: int,
     n_bins: int,
@@ -43,7 +43,7 @@ def _hist_kernel(
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    node = node_ref[:, 0]                       # (S,)
+    node = node_ref[:, 0]  # (S,)
     grad = grad_ref[:, 0]
     hess = hess_ref[:, 0]
 
@@ -69,10 +69,10 @@ def _hist_kernel(
     static_argnames=("n_nodes", "n_bins", "sample_block", "feature_block", "interpret"),
 )
 def histogram_pallas(
-    bins: jax.Array,       # (N, F) int32 — N % sample_block == 0 (wrapper pads)
-    node_ids: jax.Array,   # (N,) int32
-    grad: jax.Array,       # (N,) f32
-    hess: jax.Array,       # (N,) f32
+    bins: jax.Array,  # (N, F) int32 — N % sample_block == 0 (wrapper pads)
+    node_ids: jax.Array,  # (N,) int32
+    grad: jax.Array,  # (N,) f32
+    hess: jax.Array,  # (N,) f32
     n_nodes: int,
     n_bins: int,
     sample_block: int = 512,

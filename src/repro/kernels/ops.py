@@ -141,20 +141,25 @@ def forest_traverse(
     backend: str = "auto",
     sample_block: int = 256,
     tree_block: int = 512,
+    n_outputs: int = 1,
 ) -> jax.Array:
     """Masked forest sum (N,) f32 — the serving predict. See forest_traversal.py.
 
     Slots >= ``n_trees`` contribute exactly 0 regardless of their contents,
     so partially-filled and hot-swapped forests serve correctly. The ref
     backend is the O(N)-memory scan (production CPU form); the kernel's
-    bitwise oracle is ``ref.forest_traverse_ref``.
+    bitwise oracle is ``ref.forest_traverse_ref``. With ``n_outputs`` =
+    K > 1 the result is (N, K): slot t reduces into output column t % K
+    (padded tree slots are masked by ``n_trees``, so padding never leaks
+    into any output column).
     """
     if backend == "auto":
         backend = _default_backend()
     n_trees = jnp.asarray(n_trees, jnp.int32)
     if backend == "ref":
         return _ref.apply_forest_ref(
-            bins, feature, threshold, leaf_value, depth, n_trees
+            bins, feature, threshold, leaf_value, depth, n_trees,
+            n_outputs=n_outputs,
         )
     if backend != "pallas":
         raise ValueError(f"unknown backend {backend!r}")
@@ -172,6 +177,7 @@ def forest_traverse(
     out = forest_traverse_pallas(
         binsp, featp, thrp, leafp, n_trees, depth,
         sample_block=sb, tree_block=tb, interpret=interpret,
+        n_outputs=n_outputs,
     )
     return out[:n]
 
@@ -231,8 +237,8 @@ _flash_fwd_only.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
 
 
 def flash_attention(
-    q: jax.Array,       # (B, Sq, H, hd)
-    k: jax.Array,       # (B, Sk, KV, hd)
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Sk, KV, hd)
     v: jax.Array,
     causal: bool = True,
     backend: str = "auto",

@@ -14,10 +14,10 @@ import jax.numpy as jnp
 
 @functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins"))
 def histogram_ref(
-    bins: jax.Array,      # (N, F) int32 bin ids
+    bins: jax.Array,  # (N, F) int32 bin ids
     node_ids: jax.Array,  # (N,) int32 current node per sample, -1 = inactive
-    grad: jax.Array,      # (N,) f32 weighted gradient  (m'_i * l'_i)
-    hess: jax.Array,      # (N,) f32 weighted hessian / count weight
+    grad: jax.Array,  # (N,) f32 weighted gradient  (m'_i * l'_i)
+    hess: jax.Array,  # (N,) f32 weighted hessian / count weight
     n_nodes: int,
     n_bins: int,
 ) -> jax.Array:
@@ -43,8 +43,8 @@ def histogram_ref(
 
 @jax.jit
 def split_scan_ref(
-    hist: jax.Array,      # (2, L, F, B) f32 grad/hess histograms
-    lam: jax.Array,       # scalar L2 regularizer
+    hist: jax.Array,  # (2, L, F, B) f32 grad/hess histograms
+    lam: jax.Array,  # scalar L2 regularizer
     min_child_hess: jax.Array,  # scalar: both children need >= this hessian mass
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Best split per node from histograms.
@@ -53,10 +53,10 @@ def split_scan_ref(
     gain = GL^2/(HL+lam) + GR^2/(HR+lam) - G^2/(H+lam); splitting at bin b
     sends bins <= b left. The last bin is not a valid split point.
     """
-    g, h = hist[0], hist[1]                       # (L, F, B)
-    gl = jnp.cumsum(g, axis=-1)                   # left sums, inclusive
+    g, h = hist[0], hist[1]  # (L, F, B)
+    gl = jnp.cumsum(g, axis=-1)  # left sums, inclusive
     hl = jnp.cumsum(h, axis=-1)
-    gt = gl[..., -1:]                             # totals (L, F, 1)
+    gt = gl[..., -1:]  # totals (L, F, 1)
     ht = hl[..., -1:]
     gr = gt - gl
     hr = ht - hl
@@ -65,7 +65,7 @@ def split_scan_ref(
     valid = (hl >= min_child_hess) & (hr >= min_child_hess)
     valid = valid.at[..., -1].set(False)
     gain = jnp.where(valid, gain, -jnp.inf)
-    flat = gain.reshape(gain.shape[0], -1)        # (L, F*B)
+    flat = gain.reshape(gain.shape[0], -1)  # (L, F*B)
     idx = jnp.argmax(flat, axis=-1)
     best_gain = jnp.take_along_axis(flat, idx[:, None], axis=-1)[:, 0]
     nb = hist.shape[-1]
@@ -74,8 +74,8 @@ def split_scan_ref(
 
 @functools.partial(jax.jit, static_argnames=("causal", "group"))
 def flash_attention_ref(
-    q: jax.Array,      # (BH, Sq, d)
-    k: jax.Array,      # (BKV, Sk, d)
+    q: jax.Array,  # (BH, Sq, d)
+    k: jax.Array,  # (BKV, Sk, d)
     v: jax.Array,
     causal: bool = True,
     group: int = 1,
@@ -110,14 +110,15 @@ def _tree_leaf_values(
     return jnp.take(leaves, node - ((1 << depth) - 1))
 
 
-@functools.partial(jax.jit, static_argnames=("depth",))
+@functools.partial(jax.jit, static_argnames=("depth", "n_outputs"))
 def forest_traverse_ref(
-    bins: jax.Array,        # (N, F) int32
-    feature: jax.Array,     # (T, 2^d - 1) int32
-    threshold: jax.Array,   # (T, 2^d - 1) int32
+    bins: jax.Array,  # (N, F) int32
+    feature: jax.Array,  # (T, 2^d - 1) int32
+    threshold: jax.Array,  # (T, 2^d - 1) int32
     leaf_value: jax.Array,  # (T, 2^d) f32
-    n_trees: jax.Array,     # () int32 — live slots
+    n_trees: jax.Array,  # () int32 — live slots
     depth: int,
+    n_outputs: int = 1,
 ) -> jax.Array:
     """Masked forest sum, (N,) f32 — the traversal kernel's oracle.
 
@@ -128,29 +129,40 @@ def forest_traverse_ref(
     interpret-mode parity is bitwise. It materializes a transient (T, N)
     buffer; for large train-set evaluation use ``apply_forest_ref`` with
     ``n_trees``, the O(N)-memory scan form of the same sum.
+
+    With ``n_outputs`` = K > 1, slot t belongs to output t % K (the
+    forest's round-major/output-minor layout) and the result is (N, K).
     """
     per_tree = jax.vmap(
         lambda feat, thr, leaves: _tree_leaf_values(bins, feat, thr, leaves, depth)
-    )(feature, threshold, leaf_value)                          # (T, N)
+    )(feature, threshold, leaf_value)  # (T, N)
     live = jnp.arange(feature.shape[0])[:, None] < n_trees
-    return jnp.sum(jnp.where(live, per_tree, 0.0), axis=0).astype(jnp.float32)
+    masked = jnp.where(live, per_tree, 0.0)
+    if n_outputs == 1:
+        return jnp.sum(masked, axis=0).astype(jnp.float32)
+    out_k = jnp.arange(feature.shape[0]) % n_outputs
+    per_out = jax.ops.segment_sum(masked, out_k, num_segments=n_outputs)
+    return per_out.T.astype(jnp.float32)  # (N, K)
 
 
-@functools.partial(jax.jit, static_argnames=("depth",))
+@functools.partial(jax.jit, static_argnames=("depth", "n_outputs"))
 def apply_forest_ref(
-    bins: jax.Array,        # (N, F) int32
-    feature: jax.Array,     # (T, 2^d - 1) int32
-    threshold: jax.Array,   # (T, 2^d - 1) int32
+    bins: jax.Array,  # (N, F) int32
+    feature: jax.Array,  # (T, 2^d - 1) int32
+    threshold: jax.Array,  # (T, 2^d - 1) int32
     leaf_value: jax.Array,  # (T, 2^d) f32
     depth: int,
-    n_trees: jax.Array | None = None,   # () int32; None = all slots live
+    n_trees: jax.Array | None = None,  # () int32; None = all slots live
+    n_outputs: int = 1,
 ) -> jax.Array:
     """Sum of per-tree predictions, (N,) f32 — the forest F(x) evaluation.
 
     Scan-accumulated: O(N) live memory regardless of T (the right form for
     full-train-set evaluation). With ``n_trees``, slots past the live count
     contribute exactly 0 (same masking contract as ``forest_traverse_ref``;
-    on zero-padded training forests the two agree either way).
+    on zero-padded training forests the two agree either way). With
+    ``n_outputs`` = K > 1, slot t accumulates into output column t % K
+    and the result is (N, K).
     """
 
     def one_tree(carry, tree):
@@ -159,11 +171,16 @@ def apply_forest_ref(
         vals = _tree_leaf_values(bins, feat, thr, leaves, depth)
         if n_trees is not None:
             vals = jnp.where(idx < n_trees, vals, 0.0)
-        return (total + vals, idx + 1), None
+        if n_outputs == 1:
+            total = total + vals
+        else:
+            total = total.at[:, idx % n_outputs].add(vals)
+        return (total, idx + 1), None
 
+    shape = (bins.shape[0],) if n_outputs == 1 else (bins.shape[0], n_outputs)
     (total, _), _ = jax.lax.scan(
         one_tree,
-        (jnp.zeros((bins.shape[0],), jnp.float32), jnp.asarray(0, jnp.int32)),
+        (jnp.zeros(shape, jnp.float32), jnp.asarray(0, jnp.int32)),
         (feature, threshold, leaf_value),
     )
     return total

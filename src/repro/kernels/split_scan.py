@@ -20,7 +20,7 @@ from jax.experimental import pallas as pl
 
 
 def _split_kernel(g_ref, h_ref, lam_ref, minh_ref, gain_ref):
-    g = g_ref[...]            # (L_blk, F_blk, B)
+    g = g_ref[...]  # (L_blk, F_blk, B)
     h = h_ref[...]
     lam = lam_ref[0, 0]
     min_h = minh_ref[0, 0]
@@ -44,8 +44,8 @@ def _split_kernel(g_ref, h_ref, lam_ref, minh_ref, gain_ref):
     jax.jit, static_argnames=("node_block", "feature_block", "interpret")
 )
 def split_gain_pallas(
-    hist: jax.Array,          # (2, L, F, B) f32
-    lam: jax.Array,           # scalar
+    hist: jax.Array,  # (2, L, F, B) f32
+    lam: jax.Array,  # scalar
     min_child_hess: jax.Array,
     node_block: int = 8,
     feature_block: int = 8,

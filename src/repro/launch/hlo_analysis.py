@@ -139,7 +139,7 @@ def _walk_multiplicity(comps, entry):
                 for nm in mm.group(1).split(","):
                     refs.append((nm.strip().lstrip("%"), True, 1))
             for mm in re.finditer(r"calls=%?([\w.\-]+)", ln):
-                refs.append((mm.group(1), False, 1))       # fusion body: inlined
+                refs.append((mm.group(1), False, 1))  # fusion body: inlined
             for mm in re.finditer(r"to_apply=%?([\w.\-]+)", ln):
                 top = opcode == "call"
                 refs.append((mm.group(1), top, 1))
@@ -226,9 +226,9 @@ def analyze_hlo(hlo: str) -> HloStats:
                 ops_m = re.search(rf"{opcode}\(([^)]*)\)", ln)
                 if ops_m:
                     args = ops_m.group(1)
-                    if _SHAPE_RE.search(args):   # inline operand shapes
+                    if _SHAPE_RE.search(args):  # inline operand shapes
                         b += _shape_bytes(args)
-                    else:                        # bare %names: symbol table
+                    else:  # bare %names: symbol table
                         for operand in args.split(","):
                             operand = operand.strip().lstrip("%")
                             b += _shape_bytes(shape_of.get(operand, ""))

@@ -10,7 +10,8 @@ end, then answer batched raw-float prediction requests through the
 the newest checkpoint between waves:
 
     PYTHONPATH=src python -m repro.launch.serve --arch gbdt \
-        --trees 60 --requests 12 [--rows 64] [--workers 8]
+        --trees 60 --requests 12 [--rows 64] [--workers 8] \
+        [--objective logistic|multiclass:3|...]
 """
 from __future__ import annotations
 
@@ -30,25 +31,43 @@ from repro.models import init_params
 
 
 def run_gbdt(args) -> None:
-    """Train -> checkpoint -> serve handoff, with a live hot swap."""
+    """Train -> checkpoint -> serve handoff, with a live hot swap.
+
+    ``--objective`` picks the training objective; the server applies its
+    ``link`` inside the jitted predict, so multiclass serves (rows, K)
+    softmax probabilities and logistic serves p(y=1).
+    """
     from repro.checkpoint import CheckpointManager
     from repro.core.sgbdt import SGBDTConfig
+    from repro.objectives import get_objective
     from repro.ps import Trainer
     from repro.serving import ForestServer, PredictRequest, load_forest_checkpoint
     from repro.trees.binning import bin_dataset
     from repro.trees.learner import LearnerConfig
 
+    obj = get_objective(args.objective)
     rng = np.random.default_rng(args.seed)
     n, dim = 2_000, 40
-    x = rng.standard_normal((n, dim)).astype(np.float32)
-    w = rng.standard_normal(dim).astype(np.float32)
-    y = (x @ w + 0.1 * rng.standard_normal(n) > 0).astype(np.float32)
-    data = bin_dataset(x, y, n_bins=64)
+    if obj.n_outputs > 1 or obj.name == "lambdarank":
+        # Objectives with structured targets (class ids, query groups) use
+        # the shared objective -> workload dispatch.
+        from repro.launch.train import gbdt_dataset_for
+
+        _, data = gbdt_dataset_for(args.objective, args.seed, n=n)
+        dim = data.n_features
+    else:
+        # Scalar-target objectives (logistic/mse/quantile/huber) all train
+        # on the demo's lightweight dense set — fast enough for CI smokes.
+        x = rng.standard_normal((n, dim)).astype(np.float32)
+        w = rng.standard_normal(dim).astype(np.float32)
+        y = (x @ w + 0.1 * rng.standard_normal(n) > 0).astype(np.float32)
+        data = bin_dataset(x, y, n_bins=64)
 
     cfg = SGBDTConfig(
         n_trees=args.trees,
         step_length=0.15,
         sampling_rate=0.8,
+        objective=args.objective,
         learner=LearnerConfig(depth=5, n_bins=64, feature_fraction=0.8),
     )
     ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="gbdt_serve_")
@@ -71,6 +90,7 @@ def run_gbdt(args) -> None:
         data.bin_edges,
         max_rows=args.rows,
         model_step=half,
+        objective=obj,
     )
     reqs = [
         PredictRequest(
@@ -120,6 +140,9 @@ def main() -> None:
                     help="wave capacity in rows (--arch gbdt)")
     ap.add_argument("--ckpt-dir", default=None,
                     help="checkpoint directory (default: fresh tempdir)")
+    ap.add_argument("--objective", default="logistic",
+                    help="GBDT objective spec; served outputs go through "
+                         "its link (e.g. multiclass:3 -> softmax rows)")
     args = ap.parse_args()
 
     if args.arch == "gbdt":

@@ -19,7 +19,7 @@ from repro.models.config import ModelConfig
 @dataclasses.dataclass(frozen=True)
 class ShapeSpec:
     name: str
-    kind: str          # 'train' | 'prefill' | 'decode'
+    kind: str  # 'train' | 'prefill' | 'decode'
     seq_len: int
     global_batch: int
 

@@ -25,8 +25,8 @@ def make_train_step(
     mesh=None,
     batch_axes: tuple[str, ...] = ("data",),
     accum: int = 1,
-    sampling_rate: float = 0.0,   # > 0: draw Bernoulli weights per microbatch
-    grad_specs=None,              # PartitionSpec pytree for the f32 grad
+    sampling_rate: float = 0.0,  # > 0: draw Bernoulli weights per microbatch
+    grad_specs=None,  # PartitionSpec pytree for the f32 grad
                                   # accumulator (pin to the param specs so
                                   # per-microbatch grad sync lowers to
                                   # reduce-scatter, not all-reduce — §Perf)

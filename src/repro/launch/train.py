@@ -12,7 +12,8 @@ two halves of asynch-SGBDT applied to NN training.
 parameter-server engine (``repro.ps``):
 
     PYTHONPATH=src python -m repro.launch.train --arch gbdt \
-        --steps 200 --workers 16 [--sample 0.8] [--scan]
+        --steps 200 --workers 16 [--sample 0.8] [--scan] \
+        [--objective logistic|mse|quantile:0.9|huber|multiclass:5|lambdarank]
 """
 from __future__ import annotations
 
@@ -41,7 +42,7 @@ def synthetic_batches(cfg, batch: int, seq: int, steps: int, seed: int = 0):
         toks = np.empty((batch, seq + 1), np.int64)
         toks[:, 0] = rng.integers(0, v, size=batch)
         choice = rng.integers(0, 4, size=(batch, seq))
-        mix = rng.random((batch, seq)) < 0.1          # 10% noise
+        mix = rng.random((batch, seq)) < 0.1  # 10% noise
         noise = rng.integers(0, v, size=(batch, seq))
         for t in range(seq):
             step_tok = nxt[toks[:, t], choice[:, t]]
@@ -58,38 +59,64 @@ def synthetic_batches(cfg, batch: int, seq: int, steps: int, seed: int = 0):
         yield batch_d
 
 
-def run_gbdt(args) -> None:
-    """Asynch-SGBDT on the PS engine: round-robin W workers, loop or scan."""
+def gbdt_dataset_for(objective, seed: int, n: int = 4_000):
+    """Objective-matched synthetic workload (see data.synthetic).
+
+    The single objective -> workload dispatch, shared by this driver and
+    the benchmarks (``benchmarks.fig10_speedup --objective``).
+    """
     import repro.data as D
-    from repro.core.sgbdt import SGBDTConfig, train_loss
+    from repro.objectives import get_objective
+
+    obj = get_objective(objective)
+    if obj.name == "lambdarank":
+        return obj, D.make_ranking(max(n // 16, 16), 16, 40, seed=seed)
+    if obj.n_outputs > 1:
+        return obj, D.make_multiclass_classification(n, 60, obj.n_outputs, seed=seed)
+    if obj.name in ("mse", "quantile", "huber"):
+        return obj, D.make_sparse_regression(n, 1_000, 20, seed=seed)
+    return obj, D.make_sparse_classification(n, 1_000, 20, seed=seed)
+
+
+def run_gbdt(args) -> None:
+    """Asynch-SGBDT on the PS engine: round-robin W workers, loop or scan.
+
+    ``--objective`` selects the training objective (and a matched synthetic
+    workload): ``logistic`` (default), ``mse``, ``quantile[:a]``,
+    ``huber``, ``multiclass:K``, ``lambdarank``.
+    """
+    from repro.core.sgbdt import SGBDTConfig, train_loss, train_metrics
     from repro.ps import Trainer
     from repro.trees.learner import LearnerConfig
 
-    data = D.make_sparse_classification(4_000, 1_000, 20, seed=args.seed)
+    obj, data = gbdt_dataset_for(args.objective, args.seed)
     cfg = SGBDTConfig(
         n_trees=args.steps,
         step_length=0.15,
         sampling_rate=args.sample or 0.8,
+        objective=args.objective,
         learner=LearnerConfig(depth=6, n_bins=64, feature_fraction=0.8),
     )
     trainer = Trainer(cfg)
     schedule = ("round_robin", args.workers)
-    print(f"gbdt: {args.steps} trees, {args.workers} PS workers "
-          f"({'scan' if args.scan else 'loop'} form)")
+    print(f"gbdt[{obj.name}, K={obj.n_outputs}]: {args.steps} rounds, "
+          f"{args.workers} PS workers ({'scan' if args.scan else 'loop'} form)")
     t0 = time.time()
     if args.scan:
         state, losses = trainer.train_scan(data, schedule, seed=args.seed)
         print(f"loss {float(losses[0]):.4f} -> {float(losses[-1]):.4f}")
     else:
         def on_eval(st, j):
-            print(f"  tree {j:4d}: train loss "
+            print(f"  round {j:4d}: train loss "
                   f"{float(train_loss(cfg, data, st)):.4f}")
 
         state = trainer.train(
             data, schedule, seed=args.seed,
             eval_every=max(args.log_every, 1) * 5, eval_fn=on_eval,
         )
-        print(f"final loss {float(train_loss(cfg, data, state)):.4f}")
+        metrics = {k: f"{float(v):.4f}"
+                   for k, v in train_metrics(cfg, data, state).items()}
+        print(f"final {metrics}")
     print(f"trained in {time.time() - t0:.1f}s")
     assert np.isfinite(float(train_loss(cfg, data, state))), "training diverged"
 
@@ -116,6 +143,9 @@ def main() -> None:
                     help="parameter-server worker count (--arch gbdt)")
     ap.add_argument("--scan", action="store_true",
                     help="run the GBDT trainer in its lax.scan form")
+    ap.add_argument("--objective", default="logistic",
+                    help="GBDT objective registry spec: logistic | mse | "
+                         "quantile[:a] | huber | multiclass:K | lambdarank")
     args = ap.parse_args()
 
     if args.arch == "gbdt":

@@ -11,14 +11,14 @@ def _round_up(x: int, m: int) -> int:
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
     name: str
-    family: str                 # dense | moe | vlm | audio | hybrid | ssm
+    family: str  # dense | moe | vlm | audio | hybrid | ssm
     n_layers: int
     d_model: int
     n_heads: int
     n_kv_heads: int
     d_ff: int
     vocab_size: int
-    head_dim: int = 0           # 0 -> d_model // n_heads
+    head_dim: int = 0  # 0 -> d_model // n_heads
 
     # MoE
     n_experts: int = 0
@@ -27,9 +27,9 @@ class ModelConfig:
     router_aux_weight: float = 0.01
 
     # Attention
-    sliding_window: int = 0     # 0 = full attention (training/prefill mask)
+    sliding_window: int = 0  # 0 = full attention (training/prefill mask)
     rope_theta: float = 10_000.0
-    attn_chunk: int = 1024      # q-chunk for memory-bounded attention
+    attn_chunk: int = 1024  # q-chunk for memory-bounded attention
     # 'chunked' — lax.map q-chunks (XLA-fused, runs everywhere);
     # 'flash'   — the Pallas online-softmax kernel (TPU target; interpret
     #             mode on CPU). Full-causal training/prefill only; SWA and
@@ -37,17 +37,17 @@ class ModelConfig:
     attn_impl: str = "chunked"
 
     # VLM / audio frontends (stubs provide embeddings of this shape)
-    cross_attn_every: int = 0   # every k-th layer cross-attends (vlm)
-    n_media_tokens: int = 0     # image patch / audio frame count
-    encoder_layers: int = 0     # whisper encoder depth
+    cross_attn_every: int = 0  # every k-th layer cross-attends (vlm)
+    n_media_tokens: int = 0  # image patch / audio frame count
+    encoder_layers: int = 0  # whisper encoder depth
 
     # SSM / hybrid / xlstm
     ssm_state: int = 0
     ssm_head_dim: int = 64
     ssm_expand: int = 2
-    ssm_chunk: int = 256        # SSD chunk length
+    ssm_chunk: int = 256  # SSD chunk length
     shared_attn_every: int = 0  # zamba2: shared attention block period
-    slstm_every: int = 0        # xlstm: every k-th block is sLSTM
+    slstm_every: int = 0  # xlstm: every k-th block is sLSTM
 
     # Serving
     long_context_window: int = 0  # opt-in SWA for the long_500k shape

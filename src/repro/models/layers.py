@@ -63,7 +63,7 @@ def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
     cos, sin = jnp.cos(ang), jnp.sin(ang)
     if ang.ndim == 2:  # (S, half) -> broadcast over batch and heads
         cos, sin = cos[None, :, None, :], sin[None, :, None, :]
-    else:              # (B, S, half)
+    else:  # (B, S, half)
         cos, sin = cos[:, :, None, :], sin[:, :, None, :]
     x1, x2 = x[..., :half], x[..., half:]
     out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
@@ -76,15 +76,15 @@ def swiglu(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array) -> jax.Arr
 
 # ---------------------------------------------------------------- attention
 def _attend(
-    q: jax.Array,        # (B, Sq, H, hd) — already rope'd
-    k: jax.Array,        # (B, Sk, KV, hd)
-    v: jax.Array,        # (B, Sk, KV, hd)
-    q_pos: jax.Array,    # (B, Sq) absolute positions of queries
-    k_pos: jax.Array,    # (Sk,) absolute positions of keys (-1 = empty slot)
-    window: int,         # attend iff 0 <= qpos - kpos < window (causal SWA)
+    q: jax.Array,  # (B, Sq, H, hd) — already rope'd
+    k: jax.Array,  # (B, Sk, KV, hd)
+    v: jax.Array,  # (B, Sk, KV, hd)
+    q_pos: jax.Array,  # (B, Sq) absolute positions of queries
+    k_pos: jax.Array,  # (Sk,) absolute positions of keys (-1 = empty slot)
+    window: int,  # attend iff 0 <= qpos - kpos < window (causal SWA)
     causal: bool,
-    q_seg: jax.Array | None = None,   # (B, Sq) packing segment ids (0 = pad)
-    k_seg: jax.Array | None = None,   # (B, Sk)
+    q_seg: jax.Array | None = None,  # (B, Sq) packing segment ids (0 = pad)
+    k_seg: jax.Array | None = None,  # (B, Sk)
 ) -> jax.Array:
     b, sq, h, hd = q.shape
     kv = k.shape[2]
@@ -113,12 +113,12 @@ def chunked_attention(
     q: jax.Array,
     k: jax.Array,
     v: jax.Array,
-    q_pos: jax.Array,    # (Sq,) absolute query positions (shared across batch)
-    k_pos: jax.Array,    # (Sk,)
+    q_pos: jax.Array,  # (Sq,) absolute query positions (shared across batch)
+    k_pos: jax.Array,  # (Sk,)
     window: int,
     causal: bool,
     chunk: int,
-    segments: jax.Array | None = None,   # (B, S) packing segment ids
+    segments: jax.Array | None = None,  # (B, S) packing segment ids
 ) -> jax.Array:
     """lax.map over query chunks — bounded score memory for long sequences."""
     b, sq, h, hd = q.shape
@@ -226,11 +226,11 @@ def cross_attention(
 
 def self_attention_decode(
     p: Params,
-    x: jax.Array,           # (B, 1, D) current token
-    cache_k: jax.Array,     # (B, C, KV, hd) ring buffer
+    x: jax.Array,  # (B, 1, D) current token
+    cache_k: jax.Array,  # (B, C, KV, hd) ring buffer
     cache_v: jax.Array,
-    slot_pos: jax.Array,    # (C,) absolute position stored in each slot (-1 empty)
-    pos: jax.Array,         # () current absolute position
+    slot_pos: jax.Array,  # (C,) absolute position stored in each slot (-1 empty)
+    pos: jax.Array,  # () current absolute position
     cfg: ModelConfig,
     window: int,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
@@ -266,10 +266,10 @@ def _router(p: Params, xf: jax.Array, cfg: ModelConfig):
     """Top-k routing + switch-style load-balance aux loss."""
     logits = (xf.astype(jnp.float32)) @ p["wr"].astype(jnp.float32)  # (T, E)
     probs = jax.nn.softmax(logits, axis=-1)
-    weights, ids = jax.lax.top_k(probs, cfg.top_k)                   # (T, k)
+    weights, ids = jax.lax.top_k(probs, cfg.top_k)  # (T, k)
     weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
     # aux: E * sum_e mean(one_hot tokens_e) * mean(probs_e)
-    onehot = jax.nn.one_hot(ids[:, 0], cfg.n_experts)                # top-1 load
+    onehot = jax.nn.one_hot(ids[:, 0], cfg.n_experts)  # top-1 load
     aux = cfg.n_experts * jnp.mean(
         jnp.mean(onehot, axis=0) * jnp.mean(probs, axis=0)
     )
@@ -284,7 +284,7 @@ def _expert_block(xf, ids, weights, wg, wu, wd, e_offset, capacity):
     out = jnp.zeros_like(xf)
     for j in range(e_loc):  # E_loc is tiny (1 on the production mesh)
         e = e_offset + j
-        m = ids == e                                    # (T, k)
+        m = ids == e  # (T, k)
         tok_w = jnp.sum(jnp.where(m, weights, 0.0), axis=-1)  # (T,)
         routed = jnp.any(m, axis=-1)
         rank = jnp.cumsum(routed.astype(jnp.int32)) - 1
@@ -293,7 +293,7 @@ def _expert_block(xf, ids, weights, wg, wu, wd, e_offset, capacity):
         dispatch = dispatch.at[slot].set(jnp.arange(t, dtype=jnp.int32), mode="drop")
         dispatch = dispatch[:capacity]
         xe = jnp.concatenate([xf, jnp.zeros_like(xf[:1])], 0)[dispatch]  # (C, D)
-        he = (jax.nn.silu(xe @ wg[j]) * (xe @ wu[j])) @ wd[j]            # (C, D)
+        he = (jax.nn.silu(xe @ wg[j]) * (xe @ wu[j])) @ wd[j]  # (C, D)
         we = jnp.concatenate([tok_w, jnp.zeros_like(tok_w[:1])], 0)[dispatch]
         out = out.at[dispatch].add(he * we[:, None], mode="drop")
     return out
@@ -301,12 +301,12 @@ def _expert_block(xf, ids, weights, wg, wu, wd, e_offset, capacity):
 
 def moe_ffn(
     p: Params,
-    x: jax.Array,           # (B, S, D)
+    x: jax.Array,  # (B, S, D)
     cfg: ModelConfig,
     mesh: jax.sharding.Mesh | None = None,
     batch_axes: tuple[str, ...] = ("data",),
     model_axis: str = "model",
-    capacity: int | None = None,   # None -> capacity_factor rule; -1 -> all
+    capacity: int | None = None,  # None -> capacity_factor rule; -1 -> all
                                    # local tokens (lossless; decode uses this)
 ) -> tuple[jax.Array, jax.Array]:
     """Expert-parallel MoE FFN. Returns (out, aux_loss).

@@ -67,38 +67,38 @@ def mamba2_train(
     bmat = conv_out[..., cfg.d_inner : cfg.d_inner + st]
     cmat = conv_out[..., cfg.d_inner + st :]
 
-    a = -jnp.exp(p["a_log"].astype(jnp.float32))          # (nh,)
-    la = dt * a[None, None, :]                            # log decay (B, S, nh)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (nh,)
+    la = dt * a[None, None, :]  # log decay (B, S, nh)
     xh = xin.reshape(b, s, nh, hp)
-    xdt = xh * dt[..., None].astype(xh.dtype)             # dt-weighted input
+    xdt = xh * dt[..., None].astype(xh.dtype)  # dt-weighted input
 
     # chunk views, scanned one chunk at a time so peak memory is one chunk's
     # (B, c, c, nh) decay tensor — never (B, nc, c, c, nh).
-    cum = jnp.cumsum(la.reshape(b, nc, c, nh), axis=2)     # (B, nc, c, nh)
+    cum = jnp.cumsum(la.reshape(b, nc, c, nh), axis=2)  # (B, nc, c, nh)
     xc = xdt.reshape(b, nc, c, nh, hp).transpose(1, 0, 2, 3, 4)
     bc = bmat.reshape(b, nc, c, st).transpose(1, 0, 2, 3)
     cc = cmat.reshape(b, nc, c, st).transpose(1, 0, 2, 3)
-    cumt = cum.transpose(1, 0, 2, 3)                       # (nc, B, c, nh)
+    cumt = cum.transpose(1, 0, 2, 3)  # (nc, B, c, nh)
     tri = jnp.tril(jnp.ones((c, c), bool))
 
     def chunk_step(h, inp):
-        cc_, bc_, xc_, cum_ = inp                          # per-chunk views
+        cc_, bc_, xc_, cum_ = inp  # per-chunk views
         # Within-chunk: y_intra[i] = sum_{j<=i} (C_i.B_j) e^{cum_i - cum_j} xdt_j
-        gmat = jnp.einsum("bis,bjs->bij", cc_, bc_)        # (B, c, c)
+        gmat = jnp.einsum("bis,bjs->bij", cc_, bc_)  # (B, c, c)
         ldiff = cum_[:, :, None, :] - cum_[:, None, :, :]  # (B, c, c, nh)
         decay = jnp.where(tri[None, :, :, None], jnp.exp(ldiff), 0.0)
-        m = gmat[..., None] * decay.astype(gmat.dtype)     # (B, c, c, nh)
+        m = gmat[..., None] * decay.astype(gmat.dtype)  # (B, c, c, nh)
         y_intra = jnp.einsum("bijh,bjhp->bihp", m.astype(xc_.dtype), xc_)
         # Inter-chunk: y_inter[i] = e^{cum_i} * C_i . h_prev
         y_inter = jnp.einsum(
             "bis,bhps,bih->bihp", cc_, h, jnp.exp(cum_).astype(cc_.dtype)
         )
         # State update: h' = e^{cum_last} h + sum_j e^{cum_last - cum_j} B_j (x) xdt_j
-        w = jnp.exp(cum_[:, -1:, :] - cum_)                # (B, c, nh)
+        w = jnp.exp(cum_[:, -1:, :] - cum_)  # (B, c, nh)
         s_chunk = jnp.einsum("bcs,bch,bchp->bhps", bc_, w.astype(bc_.dtype), xc_)
-        a_tot = jnp.exp(cum_[:, -1, :]).astype(h.dtype)    # (B, nh)
+        a_tot = jnp.exp(cum_[:, -1, :]).astype(h.dtype)  # (B, nh)
         h = h * a_tot[..., None, None] + s_chunk
-        return h, y_intra + y_inter                        # (B, c, nh, hp)
+        return h, y_intra + y_inter  # (B, c, nh, hp)
 
     h0 = jnp.zeros((b, nh, hp, st), xh.dtype)
     h_final, ys = jax.lax.scan(chunk_step, h0, (cc, bc, xc, cumt))
@@ -120,9 +120,9 @@ def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array) -> jax.Array:
 
 def mamba2_decode(
     p: Params,
-    x: jax.Array,          # (B, 1, D)
+    x: jax.Array,  # (B, 1, D)
     ssm_state: jax.Array,  # (B, nh, p, st)
-    conv_state: jax.Array, # (B, K-1, conv_channels)
+    conv_state: jax.Array,  # (B, K-1, conv_channels)
     cfg: ModelConfig,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """One token; returns (y, ssm_state', conv_state')."""
@@ -139,8 +139,8 @@ def mamba2_decode(
     cmat = conv[:, cfg.d_inner + st :]
 
     a = -jnp.exp(p["a_log"].astype(jnp.float32))
-    dt0 = dt[:, 0]                                          # (B, nh)
-    decay = jnp.exp(dt0 * a[None, :]).astype(x.dtype)       # (B, nh)
+    dt0 = dt[:, 0]  # (B, nh)
+    decay = jnp.exp(dt0 * a[None, :]).astype(x.dtype)  # (B, nh)
     xh = xin.reshape(b, nh, hp) * dt0[..., None].astype(x.dtype)
     upd = jnp.einsum("bhp,bs->bhps", xh, bmat)
     ssm_state = ssm_state * decay[..., None, None] + upd

@@ -32,7 +32,7 @@ Params = dict[str, Any]
 
 class Entry(NamedTuple):
     shape: tuple
-    axes: tuple          # logical axis names, same length as shape
+    axes: tuple  # logical axis names, same length as shape
     init: str = "normal"  # normal | zeros | ones | alog | dtbias
 
 
@@ -325,11 +325,11 @@ def _constrainer(mesh, batch_axes: tuple):
 def backbone_train(
     params: Params,
     cfg: ModelConfig,
-    x: jax.Array,                  # (B, S, D) embedded tokens
+    x: jax.Array,  # (B, S, D) embedded tokens
     media: jax.Array | None,
     mesh=None,
     batch_axes: tuple = ("data",),
-    segments: jax.Array | None = None,   # (B, S) packing ids (dense/moe)
+    segments: jax.Array | None = None,  # (B, S) packing ids (dense/moe)
 ) -> tuple[jax.Array, jax.Array]:
     """Hidden states + moe aux loss for the full (teacher-forced) sequence."""
     s = x.shape[1]
@@ -420,13 +420,13 @@ def forward_train(
         params, cfg, x, media, mesh, batch_axes, segments=segments
     )
     x = L.rms_norm(x, params["final_norm"])
-    logits = x @ params["lm_head"]                        # (B, S, Vpad)
+    logits = x @ params["lm_head"]  # (B, S, Vpad)
     mask_pad = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
     logits = jnp.where(mask_pad[None, None, :], logits, -1e9)
     logits = logits.astype(jnp.float32)
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, batch["labels"][..., None], axis=-1)[..., 0]
-    per_seq = jnp.mean(logz - gold, axis=-1)              # (B,)
+    per_seq = jnp.mean(logz - gold, axis=-1)  # (B,)
     w = batch.get("weights")
     if w is None:
         ce = jnp.mean(per_seq)
@@ -590,7 +590,7 @@ def prefill(
             return h, (hs, cs, k, v)
 
         x, (hs, cs, ks, vs) = jax.lax.scan(group, x, params["groups"]["mamba"])
-        ssm = hs.reshape((-1,) + hs.shape[2:])   # (g*every, B, nh, hp, st)
+        ssm = hs.reshape((-1,) + hs.shape[2:])  # (g*every, B, nh, hp, st)
         conv = cs.reshape((-1,) + cs.shape[2:])
         if "tail" in params:
             def mb(u, q):
@@ -630,13 +630,13 @@ def prefill(
 def decode_step(
     params: Params,
     cfg: ModelConfig,
-    tokens: jax.Array,        # (B, 1) int32 — the newest token
+    tokens: jax.Array,  # (B, 1) int32 — the newest token
     cache: dict,
     mesh=None,
     batch_axes: tuple = ("data",),
 ) -> tuple[jax.Array, dict]:
     """One token against the cache. Returns (logits (B, Vpad), cache')."""
-    x = jnp.take(params["embed"], tokens, axis=0)   # (B, 1, D)
+    x = jnp.take(params["embed"], tokens, axis=0)  # (B, 1, D)
     pos = cache["pos"]
     fam = cfg.family
     new = dict(cache)

@@ -44,23 +44,23 @@ def _mlstm_chunk_scan(q, k, v, li, lf, chunk, return_state: bool = False):
             1, 0, 2, *range(3, x.ndim + 1)
         )
 
-    qc, kc, vc = reshape(q), reshape(k), reshape(v)            # (nc, B, c, H, p)
-    lic = li.reshape(b, nc, c, h).transpose(1, 0, 2, 3)        # (nc, B, c, H)
+    qc, kc, vc = reshape(q), reshape(k), reshape(v)  # (nc, B, c, H, p)
+    lic = li.reshape(b, nc, c, h).transpose(1, 0, 2, 3)  # (nc, B, c, H)
     lfc = lf.reshape(b, nc, c, h).transpose(1, 0, 2, 3)
 
     def step(carry, inp):
-        cmat, nvec, m_prev = carry      # (B,H,p,p), (B,H,p), (B,H)
+        cmat, nvec, m_prev = carry  # (B,H,p,p), (B,H,p), (B,H)
         qi, ki, vi, lii, lfi = inp
-        fcum = jnp.cumsum(lfi, axis=1)                          # (B, c, H)
+        fcum = jnp.cumsum(lfi, axis=1)  # (B, c, H)
         # intra log weights (B, c_i, c_j, H)
         logw = fcum[:, :, None, :] - fcum[:, None, :, :] + lii[:, None, :, :]
         logw = jnp.where(tri[None, :, :, None], logw, -jnp.inf)
-        m_intra = jnp.max(logw, axis=2)                         # (B, c, H)
+        m_intra = jnp.max(logw, axis=2)  # (B, c, H)
         m_inter = fcum + m_prev[:, None, :]
-        m_i = jnp.maximum(m_intra, m_inter)                     # (B, c, H)
+        m_i = jnp.maximum(m_intra, m_inter)  # (B, c, H)
         m_i = jnp.maximum(m_i, -80.0)  # keep exp() sane when all gates tiny
-        w = jnp.exp(logw - m_i[:, :, None, :])                  # (B, c, c, H)
-        binter = jnp.exp(m_inter - m_i)                         # (B, c, H)
+        w = jnp.exp(logw - m_i[:, :, None, :])  # (B, c, c, H)
+        binter = jnp.exp(m_inter - m_i)  # (B, c, H)
 
         scale = 1.0 / jnp.sqrt(p)
         scores = jnp.einsum("bihp,bjhp->bijh", qi, ki) * scale  # (B, c, c, H)
@@ -76,7 +76,7 @@ def _mlstm_chunk_scan(q, k, v, li, lf, chunk, return_state: bool = False):
         y = y_num / denom[..., None]
 
         # carry update (scaled by exp(-m_next))
-        ftot = fcum[:, -1, :]                                   # (B, H)
+        ftot = fcum[:, -1, :]  # (B, H)
         m_next = jnp.maximum(
             ftot + m_prev, jnp.max(ftot[:, None, :] - fcum + lii, axis=1)
         )
@@ -110,8 +110,8 @@ def mlstm_train(
     q = (x @ p["wq"]).reshape(b, s, h, hd)
     k = (x @ p["wk"]).reshape(b, s, h, hd)
     v = (x @ p["wv"]).reshape(b, s, h, hd)
-    gates = x @ p["w_if"] + p["b_if"]                           # (B, S, 2H)
-    li = gates[..., :h].astype(jnp.float32)                     # log input gate
+    gates = x @ p["w_if"] + p["b_if"]  # (B, S, 2H)
+    li = gates[..., :h].astype(jnp.float32)  # log input gate
     lf = jax.nn.log_sigmoid(gates[..., h:].astype(jnp.float32))
     if return_state:
         y, (cmat, nvec, m) = _mlstm_chunk_scan(
@@ -164,13 +164,13 @@ def slstm_train(
     """Sequential scalar-memory LSTM with block-diagonal recurrence."""
     b, s, d = x.shape
     h, hd = cfg.n_heads, cfg.head_dim
-    pre = x @ p["w_gates"] + p["b_gates"]                       # (B, S, 4d)
+    pre = x @ p["w_gates"] + p["b_gates"]  # (B, S, 4d)
     pre = pre.reshape(b, s, 4, h, hd)
 
     def step(carry, inp):
-        cst, nst, mst, hst = carry                              # (B, h, hd) x3 + h
-        pre_t = inp                                             # (B, 4, h, hd)
-        rec = jnp.einsum("bhp,hgpq->bghq", hst, p["r_gates"])   # (B, 4, h, hd)
+        cst, nst, mst, hst = carry  # (B, h, hd) x3 + h
+        pre_t = inp  # (B, 4, h, hd)
+        rec = jnp.einsum("bhp,hgpq->bghq", hst, p["r_gates"])  # (B, 4, h, hd)
         zi, zf, zz, zo = [pre_t[:, g] + rec[:, g] for g in range(4)]
         zif = zi.astype(jnp.float32)
         zff = jax.nn.log_sigmoid(zf.astype(jnp.float32))

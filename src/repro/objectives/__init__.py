@@ -1,0 +1,24 @@
+"""First-class training objectives: K-output losses through every layer.
+
+See ``base.Objective`` for the protocol and ``registry.get_objective``
+for name resolution (including the legacy ``loss="logistic"|"mse"``
+config shim). Importing this package registers the built-ins.
+"""
+from repro.objectives.base import Objective
+from repro.objectives.classification import BinaryLogistic, MulticlassSoftmax
+from repro.objectives.ranking import LambdaRank
+from repro.objectives.registry import get_objective, register, registered_objectives
+from repro.objectives.regression import Huber, Quantile, SquaredError
+
+__all__ = [
+    "Objective",
+    "BinaryLogistic",
+    "MulticlassSoftmax",
+    "SquaredError",
+    "Quantile",
+    "Huber",
+    "LambdaRank",
+    "get_objective",
+    "register",
+    "registered_objectives",
+]

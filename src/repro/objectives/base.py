@@ -1,0 +1,83 @@
+"""The Objective protocol: K raw scores per sample, end to end.
+
+The paper's analysis (Eq. 1) is stated for a generic functional-space loss
+L(F) = sum_i m_i * l(y_i, F_i) with a bounded gradient; nothing in the
+algorithm is binary-specific. An ``Objective`` packages everything a
+multi-output loss needs to flow through the whole system:
+
+  * ``n_outputs`` — K, the number of raw scores per sample. The forest
+    fits one tree per output per boosting round (K pushed as one group),
+    and every layer's arrays grow a trailing K axis when K > 1. K = 1
+    objectives keep the historical ``(N,)`` shapes bitwise-unchanged.
+  * ``init_score`` — the optimal constant model (the paper's init tree),
+    ``()`` for K = 1 or ``(K,)``.
+  * ``grad_hess`` — per-sample, per-output d/dF and d2/dF2 of the
+    *unweighted, unnormalized* loss ``loss_sum``; the engine applies the
+    Bernoulli importance weights m' itself. Shapes match ``f``.
+  * ``link`` — raw score(s) -> prediction (probability, score, ...);
+    applied inside the serving jit so served outputs match training
+    semantics.
+  * ``loss`` / ``metrics`` — multiplicity-weighted reporting.
+
+Objectives are frozen dataclasses: hashable and comparable by field
+values, so they ride inside ``SGBDTConfig`` through ``jax.jit``
+static arguments and per-config trainer caches.
+
+The autodiff contract (tested in tests/test_objectives.py): for every
+registered objective, ``grad_hess(y, f)[0] == jax.grad(loss_sum)(f)``
+exactly, and — when ``exact_hessian`` — ``grad_hess(y, f)[1]`` equals the
+diagonal of ``jax.hessian(loss_sum)``. Objectives whose conventional GBM
+hessian is a surrogate (e.g. quantile's ones) set ``exact_hessian=False``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+class Objective:
+    """Base class; see the module docstring for the contract."""
+
+    name: str = "abstract"
+    # grad_hess[0] is exactly d loss_sum / dF (a.e.).
+    exact_gradient: bool = True
+    # grad_hess[1] is exactly the diagonal of d2 loss_sum / dF2 (a.e.).
+    exact_hessian: bool = True
+
+    @property
+    def n_outputs(self) -> int:
+        return 1
+
+    # ------------------------------------------------------------- core API
+    def init_score(self, y, weight):
+        """Optimal constant raw score: () for K = 1, (K,) otherwise."""
+        raise NotImplementedError
+
+    def grad_hess(self, y, f, qid=None):
+        """Per-sample (grad, hess) of ``loss_sum`` w.r.t. ``f``; shapes = f."""
+        raise NotImplementedError
+
+    def link(self, f):
+        """Raw score(s) -> served prediction. Identity unless overridden."""
+        return f
+
+    def per_example(self, y, f):
+        """Per-sample unweighted loss (N,) — separable objectives only."""
+        raise NotImplementedError
+
+    def loss_sum(self, y, f, qid=None):
+        """Unnormalized total loss — the potential ``grad_hess`` derives."""
+        return jnp.sum(self.per_example(y, f))
+
+    def loss(self, y, f, weight=None, qid=None):
+        """Multiplicity-weighted mean loss (the paper's Eq. 1 normalized)."""
+        return weighted_mean(self.per_example(y, f), weight)
+
+    def metrics(self, y, f, weight=None, qid=None):
+        """Scalar diagnostics; always includes ``loss``."""
+        return {"loss": self.loss(y, f, weight, qid=qid)}
+
+
+def weighted_mean(x, weight=None):
+    if weight is None:
+        return jnp.mean(x)
+    return jnp.sum(weight * x) / jnp.sum(weight)

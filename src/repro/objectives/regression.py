@@ -1,0 +1,96 @@
+"""Regression objectives: squared error, quantile (pinball), Huber."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.objectives.base import Objective, weighted_mean
+from repro.objectives.registry import register
+from repro.trees.losses import mse_grad_hess, mse_loss
+
+
+@register("mse", "squared_error")
+@dataclasses.dataclass(frozen=True)
+class SquaredError(Objective):
+    """l = 0.5 (F - y)^2; init = the multiplicity-weighted label mean."""
+
+    name = "mse"
+
+    def init_score(self, y, weight):
+        return jnp.sum(weight * y) / jnp.sum(weight)
+
+    def grad_hess(self, y, f, qid=None):
+        return mse_grad_hess(y, f)
+
+    def per_example(self, y, f):
+        return 0.5 * (f - y) ** 2
+
+    def loss(self, y, f, weight=None, qid=None):
+        return mse_loss(y, f, weight)
+
+    def metrics(self, y, f, weight=None, qid=None):
+        rmse = jnp.sqrt(weighted_mean((f - y) ** 2, weight))
+        return {"loss": self.loss(y, f, weight), "rmse": rmse}
+
+
+@register("quantile", "pinball")
+@dataclasses.dataclass(frozen=True)
+class Quantile(Objective):
+    """Pinball loss for the ``alpha`` quantile.
+
+    The conventional GBM surrogate hessian of 1 is returned (the true
+    second derivative is 0 a.e., which would degenerate Newton leaves),
+    so ``exact_hessian`` is False; the gradient is exact a.e.
+    """
+
+    alpha: float = 0.5
+    name = "quantile"
+    exact_hessian = False
+
+    def init_score(self, y, weight):
+        order = jnp.argsort(y)
+        ys, ws = y[order], weight[order]
+        cum = jnp.cumsum(ws)
+        idx = jnp.searchsorted(cum, self.alpha * cum[-1])
+        return ys[jnp.clip(idx, 0, y.shape[0] - 1)]
+
+    def grad_hess(self, y, f, qid=None):
+        grad = jnp.where(y >= f, -self.alpha, 1.0 - self.alpha)
+        return grad, jnp.ones_like(f)
+
+    def per_example(self, y, f):
+        return jnp.where(y >= f, self.alpha * (y - f), (1.0 - self.alpha) * (f - y))
+
+    def metrics(self, y, f, weight=None, qid=None):
+        cover = weighted_mean(y <= f, weight)  # should approach alpha
+        return {"loss": self.loss(y, f, weight), "coverage": cover}
+
+
+@register("huber")
+@dataclasses.dataclass(frozen=True)
+class Huber(Objective):
+    """Huber loss: quadratic within ``delta`` of the label, linear outside."""
+
+    delta: float = 1.0
+    name = "huber"
+
+    def init_score(self, y, weight):
+        return jnp.sum(weight * y) / jnp.sum(weight)
+
+    def grad_hess(self, y, f, qid=None):
+        r = f - y
+        inside = jnp.abs(r) <= self.delta
+        grad = jnp.clip(r, -self.delta, self.delta)
+        return grad, jnp.where(inside, 1.0, 0.0)
+
+    def per_example(self, y, f):
+        r = f - y
+        inside = jnp.abs(r) <= self.delta
+        return jnp.where(
+            inside, 0.5 * r**2, self.delta * (jnp.abs(r) - 0.5 * self.delta)
+        )
+
+    def metrics(self, y, f, weight=None, qid=None):
+        rmse = jnp.sqrt(weighted_mean((f - y) ** 2, weight))
+        return {"loss": self.loss(y, f, weight), "rmse": rmse}

@@ -28,8 +28,8 @@ from repro.optim.optimizers import Optimizer, PyTree
 
 
 class DelayedState(NamedTuple):
-    step: jax.Array      # () int32 — how many grads have been pushed
-    ring: PyTree         # each leaf: (delay, *leaf.shape) buffered grads
+    step: jax.Array  # () int32 — how many grads have been pushed
+    ring: PyTree  # each leaf: (delay, *leaf.shape) buffered grads
     inner: PyTree
 
 

@@ -38,8 +38,8 @@ from repro.data.sampling import bernoulli_weights
 from repro.ps.schedules import max_staleness, resolve_schedule
 from repro.trees.binning import BinnedData
 from repro.trees.forest import forest_push
-from repro.trees.learner import build_tree
-from repro.trees.tree import Tree, apply_tree
+from repro.trees.learner import build_tree, build_tree_multi
+from repro.trees.tree import Tree, apply_tree, apply_tree_stack
 
 # (bins, g, h, rng) -> Tree; None means the plain single-device build.
 TreeBuilder = Callable[[jax.Array, jax.Array, jax.Array, jax.Array], Tree]
@@ -53,20 +53,41 @@ def propose_tree(
     rng: jax.Array,
     builder: TreeBuilder | None = None,
 ) -> tuple[Tree, jax.Array]:
-    """Worker side: sample Q -> build target from F^{k(j)} -> fit a tree.
+    """Worker side: sample Q -> build target from F^{k(j)} -> fit tree(s).
 
     Returns the tree and its prediction delta on the training bins (the
     "push" payload: the server folds the delta without re-evaluating).
+    K-output objectives fit one tree per output against the (N, K)
+    gradient field — a vmapped stacked build, still ONE push: the K trees
+    travel as one stacked ``Tree`` group with a (N, K) delta.
     """
+    obj = cfg.obj
     r_sample, r_feat = jax.random.split(rng)
     m_prime, _ = bernoulli_weights(r_sample, cfg.sampling_rate, data.multiplicity)
-    g, h = cfg.grad_hess(data.labels, f_target)
-    hess_w = m_prime * h if cfg.step_kind == "newton" else m_prime
-    if builder is None:
-        tree = build_tree(cfg.learner, data.bins, m_prime * g, hess_w, r_feat)
+    g, h = obj.grad_hess(data.labels, f_target, qid=data.qid)
+    if obj.n_outputs == 1:
+        hess_w = m_prime * h if cfg.step_kind == "newton" else m_prime
+        if builder is None:
+            tree = build_tree(cfg.learner, data.bins, m_prime * g, hess_w, r_feat)
+        else:
+            tree = builder(data.bins, m_prime * g, hess_w, r_feat)
+        return tree, apply_tree(tree, data.bins)
+    g_w = m_prime[:, None] * g
+    if cfg.step_kind == "newton":
+        h_w = m_prime[:, None] * h
     else:
-        tree = builder(data.bins, m_prime * g, hess_w, r_feat)
-    return tree, apply_tree(tree, data.bins)
+        h_w = jnp.broadcast_to(m_prime[:, None], g.shape)
+    if builder is None:
+        trees = build_tree_multi(cfg.learner, data.bins, g_w, h_w, r_feat)
+    else:
+        # Builders (e.g. the shard_map data-parallel build) are defined on
+        # single-output signatures; run one per output and stack the group.
+        built = [
+            builder(data.bins, g_w[:, k], h_w[:, k], r_feat)
+            for k in range(obj.n_outputs)
+        ]
+        trees = jax.tree.map(lambda *xs: jnp.stack(xs), *built)
+    return trees, apply_tree_stack(trees, data.bins)
 
 
 def server_fold(cfg, forest, f_live, tree, delta):
@@ -148,7 +169,7 @@ class Trainer:
         ring_size = max_staleness(sched) + 1
         keys = jax.random.split(jax.random.PRNGKey(seed), self.cfg.n_trees)
         state = init_state(self.cfg, data)
-        ring = jnp.broadcast_to(state.f, (ring_size, state.f.shape[0]))
+        ring = jnp.broadcast_to(state.f, (ring_size,) + state.f.shape)
         return sched, ring_size, keys, state, ring
 
     def train(
@@ -203,11 +224,13 @@ class Trainer:
             def run(data, schedule, rngs):
                 def body(carry, xs):
                     carry = step(data, carry, xs)
-                    loss = cfg.loss_fn(data.labels, carry[1], data.multiplicity)
+                    loss = cfg.obj.loss(
+                        data.labels, carry[1], data.multiplicity, qid=data.qid
+                    )
                     return carry, loss
 
                 state = init_state(cfg, data)
-                ring = jnp.broadcast_to(state.f, (ring_size, state.f.shape[0]))
+                ring = jnp.broadcast_to(state.f, (ring_size,) + state.f.shape)
                 (forest, f, _), losses = jax.lax.scan(
                     body,
                     (state.forest, state.f, ring),

@@ -36,14 +36,15 @@ from repro.trees.tree import Tree
 def build_trees_batched(
     cfg: SGBDTConfig,
     data: BinnedData,
-    f_targets: jax.Array,   # (W, N) — one stale prediction vector per worker
-    rngs: jax.Array,        # (W, 2) keys — one boosting round each
+    f_targets: jax.Array,  # (W, N) — or (W, N, K) — stale targets per worker
+    rngs: jax.Array,  # (W, 2) keys — one boosting round each
 ) -> tuple[Tree, jax.Array]:
     """All W worker builds as ONE vmapped call.
 
-    Returns (trees stacked on a leading W axis, deltas (W, N)). Each lane
-    is numerically identical to a standalone ``propose_tree`` with the same
-    (target, key) — vmap only batches, it does not reassociate.
+    Returns (trees stacked on a leading W axis, deltas (W, N) — or
+    (W, N, K) for K-output objectives). Each lane is numerically identical
+    to a standalone ``propose_tree`` with the same (target, key) — vmap
+    only batches, it does not reassociate.
     """
     return jax.vmap(lambda ft, r: propose_tree(cfg, data, ft, r))(f_targets, rngs)
 
@@ -51,7 +52,7 @@ def build_trees_batched(
 @functools.partial(jax.jit, static_argnames=("cfg", "ring_size"))
 def _block_step(cfg, data, forest, f, ring, j0, ks, rngs, ring_size):
     """One worker-pool block: batched build, then in-order server folds."""
-    f_targets = ring[ks % ring_size]                       # (W, N)
+    f_targets = ring[ks % ring_size]  # (W, N[, K])
     trees, deltas = build_trees_batched(cfg, data, f_targets, rngs)
 
     def fold(carry, xs):
@@ -86,7 +87,7 @@ def train_worker_parallel(
     sched = worker_round_robin(cfg.n_trees, n_workers)
     ring_size = max_staleness(sched) + 1
     state = init_state(cfg, data)
-    ring = jnp.broadcast_to(state.f, (ring_size, state.f.shape[0]))
+    ring = jnp.broadcast_to(state.f, (ring_size,) + state.f.shape)
     keys = jax.random.split(jax.random.PRNGKey(seed), cfg.n_trees)
     forest, f = state.forest, state.f
     for b0 in range(0, cfg.n_trees, n_workers):

@@ -31,15 +31,15 @@ from repro.models.config import ModelConfig
 @dataclasses.dataclass
 class Request:
     uid: int
-    prompt: np.ndarray                  # (P,) int32
+    prompt: np.ndarray  # (P,) int32
     max_new_tokens: int = 32
-    media: np.ndarray | None = None     # (M, D) frontend embeddings
+    media: np.ndarray | None = None  # (M, D) frontend embeddings
 
 
 @dataclasses.dataclass
 class Completion:
     uid: int
-    tokens: np.ndarray                  # generated ids (<= max_new_tokens)
+    tokens: np.ndarray  # generated ids (<= max_new_tokens)
     prefill_s: float
     decode_s: float
 

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro import checkpoint
 from repro.kernels import ops
+from repro.objectives import Objective, get_objective
 from repro.trees.binning import apply_bins
 from repro.trees.forest import Forest
 
@@ -68,7 +69,7 @@ def load_forest_checkpoint(
         base_score=jnp.asarray(found["base_score"], jnp.float32),
     )
     if like is not None:
-        for name in ("feature", "threshold", "leaf_value"):
+        for name in ("feature", "threshold", "leaf_value", "base_score"):
             got = getattr(forest, name).shape
             want = getattr(like, name).shape
             if got != want:
@@ -87,18 +88,24 @@ class PredictRequest:
 @dataclasses.dataclass
 class PredictResult:
     uid: int
-    scores: np.ndarray  # (n,) float32 — F(x) margins
-    model_step: int     # checkpoint step that served this request
-    latency_s: float    # wall time of the wave this request rode
+    scores: np.ndarray  # (n,) raw margins — or (n, K) linked predictions
+    model_step: int  # checkpoint step that served this request
+    latency_s: float  # wall time of the wave this request rode
 
 
 class ForestServer:
     """Wave-batched GBDT inference with checkpoint hot-swap.
 
-    ``forest`` is the serving template (its capacity/depth fix the jit
-    shapes); ``bin_edges`` are the training-time quantile edges. With
-    ``ckpt_root``, ``maybe_reload`` (called between waves and available to
-    callers) polls ``checkpoint.latest_step`` and swaps in newer forests.
+    ``forest`` is the serving template (its capacity/depth/output count fix
+    the jit shapes); ``bin_edges`` are the training-time quantile edges.
+    With ``ckpt_root``, ``maybe_reload`` (called between waves and available
+    to callers) polls ``checkpoint.latest_step`` and swaps in newer forests.
+
+    With ``objective`` (an ``Objective`` or registry spec string), the
+    objective's ``link`` is applied INSIDE the jitted predict — served
+    outputs are probabilities/scores with exactly the training-time
+    semantics (e.g. (rows, K) softmax rows for ``"multiclass:K"``).
+    Without it, raw F(x) margins are served (the historical contract).
     """
 
     def __init__(
@@ -110,6 +117,7 @@ class ForestServer:
         max_rows: int = 256,
         backend: str = "auto",
         model_step: int = -1,
+        objective: Objective | str | None = None,
     ):
         self.forest = forest
         self.bin_edges = jnp.asarray(bin_edges, jnp.float32)
@@ -117,15 +125,26 @@ class ForestServer:
         self.max_rows = max_rows
         self.model_step = model_step
         self.waves_served = 0
+        self.objective = get_objective(objective) if objective is not None else None
         depth = forest.depth
+        n_outputs = forest.n_outputs
+        obj = self.objective
+        if obj is not None and obj.n_outputs != n_outputs:
+            # A mismatched link would silently normalize across the wave
+            # (e.g. softmax over a (rows,) vector) instead of per row.
+            raise ValueError(
+                f"objective {obj.name!r} has {obj.n_outputs} outputs but the "
+                f"forest serves {n_outputs}"
+            )
 
         def predict(forest: Forest, edges: jax.Array, x: jax.Array) -> jax.Array:
             bins = apply_bins(x, edges)
             pred = ops.forest_traverse(
                 bins, forest.feature, forest.threshold, forest.leaf_value,
-                forest.n_trees, depth, backend=backend,
+                forest.n_trees, depth, backend=backend, n_outputs=n_outputs,
             )
-            return forest.base_score + pred
+            raw = forest.base_score + pred
+            return raw if obj is None else obj.link(raw)
 
         self._predict = jax.jit(predict)
         self._queue: collections.deque[PredictRequest] = collections.deque()

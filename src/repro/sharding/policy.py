@@ -97,19 +97,19 @@ def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int, seq_len: int) -> dict:
         out["self"] = _attn_cache_spec(mesh, struct["self"]["k"].shape, baxes, baxes)
     elif fam in ("vlm", "audio"):
         out["self"] = _attn_cache_spec(mesh, struct["self"]["k"].shape, baxes, baxes)
-        mk = struct["media_k"].shape       # (L, B, M, KV, hd)
+        mk = struct["media_k"].shape  # (L, B, M, KV, hd)
         out["media_k"] = P(None, baxes or None, None, model_if(mk[3]), None)
         out["media_v"] = out["media_k"]
     elif fam == "hybrid":
-        ssm = struct["ssm"].shape          # (L, B, nh, hp, st)
+        ssm = struct["ssm"].shape  # (L, B, nh, hp, st)
         out["ssm"] = P(None, baxes or None, model_if(ssm[2]), None, None)
-        cv = struct["conv"].shape          # (L, B, K-1, conv_ch)
+        cv = struct["conv"].shape  # (L, B, K-1, conv_ch)
         out["conv"] = P(None, baxes or None, None, model_if(cv[3]))
         out["shared"] = _attn_cache_spec(
             mesh, struct["shared"]["k"].shape, baxes, baxes
         )
     elif fam == "ssm":
-        mc = struct["mlstm"]["c"].shape    # (ng, mpg, B, h, hd, hd)
+        mc = struct["mlstm"]["c"].shape  # (ng, mpg, B, h, hd, hd)
         hspec = model_if(mc[3])
         hdspec = None if hspec else model_if(mc[4])
         out["mlstm"] = {
@@ -121,7 +121,7 @@ def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int, seq_len: int) -> dict:
             "n": P(None, None, baxes or None, hspec, hdspec),
             "m": P(None, None, baxes or None, hspec),
         }
-        sc = struct["slstm"]["c"].shape    # (ng, B, h, hd)
+        sc = struct["slstm"]["c"].shape  # (ng, B, h, hd)
         shs = model_if(sc[2])
         shd = None if shs else model_if(sc[3])
         sspec = P(None, baxes or None, shs, shd)

@@ -31,23 +31,23 @@ DEFAULT_RULES: dict[str, tuple[str, ...]] = {
     "q_flat": ("model",),
     "kv_flat": ("model",),
     "experts": ("model",),
-    "gates": ("model",),          # slstm 4d gate stack
-    "inner": ("model",),          # mamba d_inner
-    "inner_proj": ("model",),     # mamba fused in_proj output
+    "gates": ("model",),  # slstm 4d gate stack
+    "inner": ("model",),  # mamba d_inner
+    "inner_proj": ("model",),  # mamba fused in_proj output
     "conv_ch": ("model",),
-    "head_dim": ("model",),       # only reached when heads were unshardable
-    "embed": ("data", "pod"),     # FSDP / ZeRO-3 axis for weights
-    "layers": (),                 # scan axis — never sharded
+    "head_dim": ("model",),  # only reached when heads were unshardable
+    "embed": ("data", "pod"),  # FSDP / ZeRO-3 axis for weights
+    "layers": (),  # scan axis — never sharded
     # --- activations / caches ---
     "batch": ("pod", "data"),
-    "seq": ("model",),            # long-context fallback: shard positions
+    "seq": ("model",),  # long-context fallback: shard positions
     "kv_heads": ("model",),
     "heads": ("model",),
     "capacity": ("model", "data"),  # decode cache ring slots
     "media": (),
     # --- GBDT parameter-server engine (repro.ps) ---
-    "samples": ("data",),           # binned rows / labels / targets / weights
-    "features": ("model",),         # feature columns of the binned matrix
+    "samples": ("data",),  # binned rows / labels / targets / weights
+    "features": ("model",),  # feature columns of the binned matrix
 }
 
 
@@ -99,7 +99,7 @@ def spec_for(
     rules = DEFAULT_RULES if rules is None else rules
     if len(shape) != len(axes):
         raise ValueError(f"shape {shape} vs axes {axes}")
-    if len(shape) < min_ndim:      # replicate small vectors/scalars
+    if len(shape) < min_ndim:  # replicate small vectors/scalars
         return P()
     used: set[str] = set()
     parts: list = []
@@ -115,7 +115,7 @@ def spec_for(
             rem //= size
         parts.append(tuple(got) if len(got) > 1 else (got[0] if got else None))
     while parts and parts[-1] is None:
-        parts.pop()                # trailing Nones are implicit
+        parts.pop()  # trailing Nones are implicit
     return P(*parts)
 
 

@@ -12,9 +12,15 @@ from repro.trees.losses import (
     mse_loss,
     sigmoid2,
 )
-from repro.trees.tree import Tree, apply_tree, empty_tree, tree_num_nodes
+from repro.trees.tree import (
+    Tree,
+    apply_tree,
+    apply_tree_stack,
+    empty_tree,
+    tree_num_nodes,
+)
 from repro.trees.forest import Forest, empty_forest, forest_predict, forest_push
-from repro.trees.learner import LearnerConfig, build_tree
+from repro.trees.learner import LearnerConfig, build_tree, build_tree_multi
 
 __all__ = [
     "BinnedData",
@@ -28,6 +34,7 @@ __all__ = [
     "sigmoid2",
     "Tree",
     "apply_tree",
+    "apply_tree_stack",
     "empty_tree",
     "tree_num_nodes",
     "Forest",
@@ -36,4 +43,5 @@ __all__ = [
     "forest_push",
     "LearnerConfig",
     "build_tree",
+    "build_tree_multi",
 ]

@@ -22,10 +22,12 @@ class BinnedData(NamedTuple):
       bins: (N, F) int32 — bin index of every sample/feature, in [0, n_bins).
       bin_edges: (F, n_bins - 1) float32 — upper edge of each bin (last bin
         is open-ended); used only to map raw inference inputs onto bins.
-      labels: (N,) float32 — {0, 1} for classification, reals for regression.
+      labels: (N,) float32 — {0, 1} for binary classification, class ids
+        for multiclass, reals for regression, relevance grades for ranking.
       multiplicity: (N,) float32 — the paper's m_i: how many times each
         *distinct* sample occurs in the logical dataset. Controls diversity.
       n_bins: static int.
+      qid: (N,) int32 query ids for ranking objectives, else None.
     """
 
     bins: jax.Array
@@ -33,6 +35,7 @@ class BinnedData(NamedTuple):
     labels: jax.Array
     multiplicity: jax.Array
     n_bins: int
+    qid: jax.Array | None = None
 
     @property
     def n_samples(self) -> int:
@@ -70,6 +73,7 @@ def bin_dataset(
     y: np.ndarray,
     n_bins: int = 256,
     multiplicity: np.ndarray | None = None,
+    qid: np.ndarray | None = None,
 ) -> BinnedData:
     """One-shot host-side dataset quantization."""
     edges = make_bins(x, n_bins)
@@ -82,4 +86,5 @@ def bin_dataset(
         labels=jnp.asarray(y, jnp.float32),
         multiplicity=jnp.asarray(multiplicity, jnp.float32),
         n_bins=n_bins,
+        qid=None if qid is None else jnp.asarray(qid, jnp.int32),
     )

@@ -3,6 +3,14 @@
 The server's additive model F(x) = sum_t v * Tree_t(x) lives here. Capacity
 is static (the paper always fixes the total tree budget T up front), so the
 forest is a pytree that jit/scan can carry.
+
+Multi-output (K > 1) objectives fit one tree per output per boosting
+round; the K trees of a round occupy K consecutive slots (round-major,
+output-minor: slot = round * K + k), so ``n_trees`` keeps counting *live
+slots* and the hot-swap/partial-fill masking contract is unchanged. The
+output count is derived from ``base_score``'s shape — a scalar for the
+historical single-output layout (bitwise-compatible checkpoints), a (K,)
+vector otherwise — so ``Forest`` stays a pure array pytree.
 """
 from __future__ import annotations
 
@@ -16,45 +24,73 @@ from repro.trees.tree import Tree, tree_num_nodes
 
 
 class Forest(NamedTuple):
-    feature: jax.Array     # (T, 2^d - 1) int32
-    threshold: jax.Array   # (T, 2^d - 1) int32
+    feature: jax.Array  # (T, 2^d - 1) int32; T = capacity * n_outputs slots
+    threshold: jax.Array  # (T, 2^d - 1) int32
     leaf_value: jax.Array  # (T, 2^d) f32 — already scaled by the step length
-    n_trees: jax.Array     # () int32 — how many slots are live
-    base_score: jax.Array  # () f32 — the paper's init tree (prior log-odds)
+    n_trees: jax.Array  # () int32 — how many slots are live
+    base_score: jax.Array  # () f32 init score, or (K,) for K-output forests
 
     @property
     def depth(self) -> int:
         return int(self.leaf_value.shape[-1]).bit_length() - 1
 
+    @property
+    def n_outputs(self) -> int:
+        return int(self.base_score.shape[-1]) if self.base_score.ndim else 1
 
-def empty_forest(capacity: int, depth: int, base_score=0.0) -> Forest:
+
+def empty_forest(capacity: int, depth: int, base_score=0.0, n_outputs: int = 1) -> Forest:
+    """``capacity`` boosting rounds x ``n_outputs`` trees each."""
     n_int, n_leaf = tree_num_nodes(depth)
+    base = jnp.asarray(base_score, jnp.float32)
+    if n_outputs > 1:
+        base = jnp.broadcast_to(base, (n_outputs,))
+    slots = capacity * n_outputs
     return Forest(
-        feature=jnp.zeros((capacity, n_int), jnp.int32),
-        threshold=jnp.full((capacity, n_int), 2**30, jnp.int32),
-        leaf_value=jnp.zeros((capacity, n_leaf), jnp.float32),
+        feature=jnp.zeros((slots, n_int), jnp.int32),
+        threshold=jnp.full((slots, n_int), 2**30, jnp.int32),
+        leaf_value=jnp.zeros((slots, n_leaf), jnp.float32),
         n_trees=jnp.asarray(0, jnp.int32),
-        base_score=jnp.asarray(base_score, jnp.float32),
+        base_score=base,
     )
 
 
 def forest_push(forest: Forest, tree: Tree, step_length: jax.Array) -> Forest:
-    """Server fold-in: F <- F + v * Tree (Algorithm 3, server step 2)."""
+    """Server fold-in: F <- F + v * Tree (Algorithm 3, server step 2).
+
+    Accepts a single tree ((n_int,) arrays) or a stacked K-output group
+    ((K, n_int) arrays) — a group lands in K consecutive slots as one push.
+    """
     t = forest.n_trees
+    if tree.leaf_value.ndim == 1:
+        return forest._replace(
+            feature=jax.lax.dynamic_update_index_in_dim(
+                forest.feature, tree.feature, t, 0
+            ),
+            threshold=jax.lax.dynamic_update_index_in_dim(
+                forest.threshold, tree.threshold, t, 0
+            ),
+            leaf_value=jax.lax.dynamic_update_index_in_dim(
+                forest.leaf_value, tree.leaf_value * step_length, t, 0
+            ),
+            n_trees=t + 1,
+        )
+    k = tree.leaf_value.shape[0]
     return forest._replace(
-        feature=jax.lax.dynamic_update_index_in_dim(forest.feature, tree.feature, t, 0),
-        threshold=jax.lax.dynamic_update_index_in_dim(
+        feature=jax.lax.dynamic_update_slice_in_dim(forest.feature, tree.feature, t, 0),
+        threshold=jax.lax.dynamic_update_slice_in_dim(
             forest.threshold, tree.threshold, t, 0
         ),
-        leaf_value=jax.lax.dynamic_update_index_in_dim(
+        leaf_value=jax.lax.dynamic_update_slice_in_dim(
             forest.leaf_value, tree.leaf_value * step_length, t, 0
         ),
-        n_trees=t + 1,
+        n_trees=t + k,
     )
 
 
 def forest_predict(forest: Forest, bins: jax.Array, backend: str = "auto") -> jax.Array:
-    """F(x) over binned inputs (N, F) -> (N,). Slots >= n_trees predict 0.
+    """F(x) over binned inputs (N, F) -> (N,), or (N, K) for K-output
+    forests. Slots >= n_trees predict 0.
 
     ``backend='auto'`` routes through the fused Pallas traversal kernel on
     TPU and the jnp oracle elsewhere (``kernels.ops.forest_traverse``).
@@ -62,5 +98,6 @@ def forest_predict(forest: Forest, bins: jax.Array, backend: str = "auto") -> ja
     pred = ops.forest_traverse(
         bins, forest.feature, forest.threshold, forest.leaf_value,
         forest.n_trees, forest.depth, backend=backend,
+        n_outputs=forest.n_outputs,
     )
     return forest.base_score + pred

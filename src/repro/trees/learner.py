@@ -26,12 +26,12 @@ from repro.trees.tree import Tree
 
 
 class LearnerConfig(NamedTuple):
-    depth: int = 7              # 2^depth leaves (paper: 100 -> 128, 400 -> 512)
+    depth: int = 7  # 2^depth leaves (paper: 100 -> 128, 400 -> 512)
     n_bins: int = 64
-    lam: float = 1.0            # L2 on leaf values
+    lam: float = 1.0  # L2 on leaf values
     min_child_hess: float = 1e-3
-    feature_fraction: float = 0.8   # paper samples 80% of features per tree
-    backend: str = "ref"        # 'ref' | 'pallas' | 'auto'
+    feature_fraction: float = 0.8  # paper samples 80% of features per tree
+    backend: str = "ref"  # 'ref' | 'pallas' | 'auto'
     # Mesh axis samples are sharded over when building under shard_map
     # (repro.ps.sharded): histograms and leaf stats psum across it; the rng
     # must be replicated so every shard draws the same feature mask.
@@ -41,10 +41,10 @@ class LearnerConfig(NamedTuple):
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def build_tree(
     cfg: LearnerConfig,
-    bins: jax.Array,    # (N, F) int32
-    g: jax.Array,       # (N,) f32 — weighted gradient target
-    h: jax.Array,       # (N,) f32 — weighted hessian / sample weight
-    rng: jax.Array,     # feature-subsampling key
+    bins: jax.Array,  # (N, F) int32
+    g: jax.Array,  # (N,) f32 — weighted gradient target
+    h: jax.Array,  # (N,) f32 — weighted hessian / sample weight
+    rng: jax.Array,  # feature-subsampling key
 ) -> Tree:
     n, n_feat = bins.shape
     depth, n_bins = cfg.depth, cfg.n_bins
@@ -90,7 +90,7 @@ def build_tree(
     n_leaves = 1 << depth
     leaf_g = jax.ops.segment_sum(g, node, num_segments=n_leaves)
     leaf_h = jax.ops.segment_sum(h, node, num_segments=n_leaves)
-    if cfg.axis_name is not None:    # merge leaf stats across data shards
+    if cfg.axis_name is not None:  # merge leaf stats across data shards
         leaf_g = jax.lax.psum(leaf_g, cfg.axis_name)
         leaf_h = jax.lax.psum(leaf_h, cfg.axis_name)
     leaf_value = -leaf_g / (leaf_h + cfg.lam)
@@ -101,3 +101,24 @@ def build_tree(
         threshold=jnp.concatenate(thresholds),
         leaf_value=leaf_value.astype(jnp.float32),
     )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def build_tree_multi(
+    cfg: LearnerConfig,
+    bins: jax.Array,  # (N, F) int32
+    g: jax.Array,  # (N, K) f32 — per-output weighted gradient field
+    h: jax.Array,  # (N, K) f32 — per-output weighted hessian / weight
+    rng: jax.Array,  # ONE feature-subsampling key shared across outputs
+) -> Tree:
+    """K trees against the (N, K) gradient field, one vmapped build.
+
+    Returns a stacked ``Tree`` with (K, ...) arrays — the K-output
+    boosting round's "one push" payload. Sharing ``rng`` across outputs
+    draws one feature mask per round (the multiclass convention: the K
+    trees of a round see the same feature subsample). Each lane is
+    numerically identical to a standalone ``build_tree`` on its column.
+    """
+    return jax.vmap(
+        lambda gk, hk: build_tree(cfg, bins, gk, hk, rng), in_axes=(1, 1)
+    )(g, h)

@@ -46,6 +46,10 @@ def mse_grad_hess(y: jax.Array, f: jax.Array) -> tuple[jax.Array, jax.Array]:
     return f - y, jnp.ones_like(f)
 
 
+# DEPRECATED: the string-keyed loss table predates the first-class
+# Objective API (``repro.objectives``). ``SGBDTConfig.loss`` strings now
+# resolve through ``objectives.get_objective``; this dict remains only for
+# external callers of the raw functions.
 LOSSES = {
     "logistic": (logistic_loss, logistic_grad_hess),
     "mse": (mse_loss, mse_grad_hess),

@@ -80,3 +80,12 @@ def apply_tree(tree: Tree, bins: jax.Array) -> jax.Array:
 def leaf_indices(tree: Tree, bins: jax.Array) -> jax.Array:
     """Expose leaf routing — used by tests and by the projection analysis."""
     return _leaf_index(bins, tree.feature, tree.threshold, tree.depth)
+
+
+def apply_tree_stack(trees: Tree, bins: jax.Array) -> jax.Array:
+    """Predict (N, K) for a stacked tree group (leading K axis per leaf).
+
+    A K-output boosting round produces one tree per output as a single
+    ``Tree`` pytree with (K, ...) arrays; this is its batched evaluation.
+    """
+    return jax.vmap(lambda t: apply_tree(t, bins), out_axes=1)(trees)

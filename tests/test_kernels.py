@@ -35,7 +35,7 @@ SHAPE_SWEEP = [
     (64, 4, 8, 1),
     (300, 10, 16, 4),
     (512, 8, 32, 8),
-    (1000, 17, 64, 16),     # non-multiple N and F -> exercises padding
+    (1000, 17, 64, 16),  # non-multiple N and F -> exercises padding
     (2048, 32, 64, 32),
 ]
 
@@ -160,10 +160,10 @@ FLASH_SWEEP = [
     # (b, sq, sk, h, kv, hd, causal)
     (2, 128, 128, 4, 4, 64, True),
     (2, 128, 128, 4, 4, 64, False),
-    (1, 256, 256, 8, 2, 64, True),     # GQA group 4
-    (2, 100, 100, 4, 2, 32, True),     # padding path
-    (1, 96, 96, 2, 2, 128, False),     # non-causal + padding (kv mask)
-    (2, 64, 192, 4, 4, 64, False),     # cross-shaped (Sq != Sk)
+    (1, 256, 256, 8, 2, 64, True),  # GQA group 4
+    (2, 100, 100, 4, 2, 32, True),  # padding path
+    (1, 96, 96, 2, 2, 128, False),  # non-causal + padding (kv mask)
+    (2, 64, 192, 4, 4, 64, False),  # cross-shaped (Sq != Sk)
 ]
 
 
@@ -240,9 +240,9 @@ FOREST_SWEEP = [
     # (N, F, n_bins, T, depth, live)
     (64, 4, 8, 1, 2, 1),
     (200, 6, 16, 3, 3, 3),
-    (300, 10, 32, 17, 4, 9),      # non-multiple N -> exercises sample padding
-    (1000, 17, 64, 40, 6, 25),    # partially filled
-    (512, 8, 64, 64, 5, 0),       # nothing live -> exact zeros
+    (300, 10, 32, 17, 4, 9),  # non-multiple N -> exercises sample padding
+    (1000, 17, 64, 40, 6, 25),  # partially filled
+    (512, 8, 64, 64, 5, 0),  # nothing live -> exact zeros
 ]
 
 
@@ -298,6 +298,58 @@ def test_forest_traverse_ref_matches_apply_forest(key):
     masked = ref.forest_traverse_ref(bins, feat, thr, leaf, live, 4)
     unmasked = ref.apply_forest_ref(bins, feat, thr, leaf, 4)
     np.testing.assert_allclose(masked, unmasked, rtol=1e-6, atol=1e-6)
+
+
+MULTI_OUT_SWEEP = [
+    # (N, F, n_bins, T, depth, live, K) — T and live are slot counts
+    (128, 5, 16, 6, 3, 6, 3),
+    (300, 8, 32, 20, 4, 12, 4),  # partially-filled, live % K == 0
+    (64, 4, 8, 10, 2, 7, 2),  # live mid-round (odd slot count)
+    (200, 6, 16, 15, 3, 0, 5),  # nothing live -> exact zeros
+]
+
+
+@pytest.mark.parametrize("n,f,n_bins,n_trees,depth,live,k", MULTI_OUT_SWEEP)
+def test_forest_traverse_multi_output_pallas_matches_ref(
+    key, n, f, n_bins, n_trees, depth, live, k
+):
+    """K-output traversal: slot t reduces into column t % K. The kernel's
+    per-output masked sums reassociate the reduction vs the oracle's
+    segment_sum, so parity is f32-tolerance (bitwise stays a K=1-only
+    property of the single-tree-block kernel)."""
+    bins, feat, thr, leaf = _rand_forest_case(key, n, f, n_bins, n_trees, depth)
+    nt = jnp.asarray(live, jnp.int32)
+    out_ref = ref.forest_traverse_ref(bins, feat, thr, leaf, nt, depth, n_outputs=k)
+    assert out_ref.shape == (n, k)
+    out_pal = ops.forest_traverse(
+        bins, feat, thr, leaf, nt, depth, backend="pallas", n_outputs=k
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_ref), np.asarray(out_pal), rtol=1e-6, atol=1e-6
+    )
+    out_scan = ops.forest_traverse(
+        bins, feat, thr, leaf, nt, depth, backend="ref", n_outputs=k
+    )
+    np.testing.assert_allclose(out_ref, out_scan, rtol=1e-6, atol=1e-6)
+
+
+def test_forest_traverse_multi_output_columns_are_per_output_sums(key):
+    """Column k of the K-output traversal equals a single-output traversal
+    over only that output's live slots."""
+    k_out, rounds, depth = 3, 4, 3
+    bins, feat, thr, leaf = _rand_forest_case(key, 100, 5, 16, k_out * rounds, depth)
+    live = k_out * rounds
+    out = ref.forest_traverse_ref(
+        bins, feat, thr, leaf, jnp.asarray(live), depth, n_outputs=k_out
+    )
+    for k in range(k_out):
+        sel = np.arange(live) % k_out == k
+        col = ref.forest_traverse_ref(
+            bins, feat[sel], thr[sel], leaf[sel],
+            jnp.asarray(int(sel.sum())), depth,
+        )
+        np.testing.assert_allclose(np.asarray(out[:, k]), np.asarray(col),
+                                   rtol=1e-6, atol=1e-6)
 
 
 # -------------------------------------------------------------- apply_forest

@@ -163,7 +163,7 @@ def test_packed_segments_isolate_documents(key):
     params = M.init_params(cfg, key)
     d1 = jax.random.randint(jax.random.fold_in(key, 1), (16,), 0, cfg.vocab_size)
     d2 = jax.random.randint(jax.random.fold_in(key, 2), (16,), 0, cfg.vocab_size)
-    packed = jnp.concatenate([d1, d2])[None, :]                 # (1, 32)
+    packed = jnp.concatenate([d1, d2])[None, :]  # (1, 32)
     segs = jnp.concatenate([jnp.ones(16), jnp.full(16, 2)])[None, :].astype(
         jnp.int32
     )
@@ -171,7 +171,7 @@ def test_packed_segments_isolate_documents(key):
     h_packed, _ = TT.backbone_train(params, cfg, x, None, segments=segs)
     lg_packed = TT._logits(params, cfg, h_packed)
 
-    separate = jnp.stack([d1, d2])                              # (2, 16)
+    separate = jnp.stack([d1, d2])  # (2, 16)
     xs = jnp.take(params["embed"], separate, axis=0)
     h_sep, _ = TT.backbone_train(params, cfg, xs, None)
     lg_sep = TT._logits(params, cfg, h_sep)

@@ -1,0 +1,291 @@
+"""The Objective API: autodiff parity, init scores, the deprecation shim,
+and the multiclass/ranking end-to-end contracts (train both ways ->
+checkpoint round-trip -> ForestServer serves (rows, K) linked outputs with
+the Pallas traversal matching the jnp oracle)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.data as D
+from repro.core.sgbdt import (
+    SGBDTConfig,
+    init_state,
+    train_loss,
+    train_metrics,
+    train_serial,
+)
+from repro.objectives import (
+    BinaryLogistic,
+    LambdaRank,
+    MulticlassSoftmax,
+    Quantile,
+    SquaredError,
+    get_objective,
+    registered_objectives,
+)
+from repro.trees.learner import LearnerConfig
+
+# One representative instance per registered family (factories that need
+# parameters get them here; the parity sweep runs over ALL of these).
+PARITY_CASES = [
+    get_objective("logistic"),
+    get_objective("mse"),
+    get_objective("quantile:0.3"),
+    get_objective("huber"),
+    get_objective("multiclass:4"),
+    get_objective("lambdarank"),
+    LambdaRank(ndcg_weight=False),  # plain RankNet mode
+]
+
+
+def _case_inputs(obj, n=24, seed=0):
+    rng = np.random.default_rng(seed)
+    f1 = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    qid = jnp.asarray(np.repeat(np.arange(n // 6), 6), jnp.int32)
+    if obj.n_outputs > 1:
+        y = jnp.asarray(rng.integers(0, obj.n_outputs, n), jnp.float32)
+        f = jnp.asarray(rng.standard_normal((n, obj.n_outputs)), jnp.float32)
+    elif obj.name == "lambdarank":
+        y = jnp.asarray(rng.integers(0, 3, n), jnp.float32)
+        f = f1
+    else:
+        y = jnp.asarray(rng.standard_normal(n), jnp.float32)
+        if obj.name == "logistic":
+            y = (y > 0).astype(jnp.float32)
+        f = f1
+    return y, f, qid
+
+
+def test_every_family_registered():
+    names = set(registered_objectives())
+    assert {"logistic", "mse", "quantile", "huber", "multiclass", "lambdarank"} <= names
+
+
+@pytest.mark.parametrize("obj", PARITY_CASES, ids=lambda o: repr(o))
+def test_grad_hess_matches_autodiff(obj):
+    """grad_hess must be the exact gradient (and, when claimed, the exact
+    hessian diagonal) of the objective's own loss_sum potential."""
+    y, f, qid = _case_inputs(obj)
+
+    def total(ff):
+        return obj.loss_sum(y, ff, qid=qid)
+
+    g, h = obj.grad_hess(y, f, qid=qid)
+    if obj.exact_gradient:
+        g_ad = jax.grad(total)(f)
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(g_ad), rtol=1e-5, atol=1e-5
+        )
+    if not obj.exact_hessian:
+        return
+    hess = jax.hessian(total)(f)
+    if f.ndim == 1:
+        diag = jnp.diagonal(hess)
+    else:  # (N, K, N, K) -> per-(sample, output) diagonal
+        n, k = f.shape
+        diag = hess.reshape(n * k, n * k).diagonal().reshape(n, k)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(diag), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- init scores
+def test_init_score_squared_error_is_weighted_mean():
+    """Regression guard for the old non-logistic init special-case: the
+    squared-error prior is the multiplicity-weighted label mean."""
+    rng = np.random.default_rng(3)
+    y = jnp.asarray(rng.standard_normal(50), jnp.float32)
+    w = jnp.asarray(rng.integers(1, 5, 50), jnp.float32)
+    base = SquaredError().init_score(y, w)
+    np.testing.assert_allclose(
+        float(base), float(jnp.sum(w * y) / jnp.sum(w)), rtol=1e-6
+    )
+    data = D.make_sparse_regression(200, 60, 8, seed=1)
+    cfg = SGBDTConfig(n_trees=4, objective="mse",
+                      learner=LearnerConfig(depth=3, n_bins=64))
+    st0 = init_state(cfg, data)
+    want = float(jnp.sum(data.multiplicity * data.labels) / jnp.sum(data.multiplicity))
+    np.testing.assert_allclose(float(st0.forest.base_score), want, rtol=1e-6)
+    assert np.allclose(np.asarray(st0.f), want)
+
+
+def test_init_score_logistic_unchanged():
+    """The shim path must reproduce the historical prior log-odds exactly."""
+    rng = np.random.default_rng(4)
+    y = jnp.asarray((rng.random(64) > 0.7).astype(np.float32))
+    w = jnp.ones(64, jnp.float32)
+    ybar = jnp.clip(jnp.mean(y), 1e-6, 1 - 1e-6)
+    want = 0.5 * jnp.log(ybar / (1 - ybar))
+    got = BinaryLogistic().init_score(y, w)
+    assert float(got) == float(want)
+
+
+def test_init_score_multiclass_log_priors():
+    y = jnp.asarray([0, 0, 0, 1, 2, 2], jnp.float32)
+    w = jnp.ones(6, jnp.float32)
+    base = MulticlassSoftmax(3).init_score(y, w)
+    assert base.shape == (3,)
+    np.testing.assert_allclose(
+        np.asarray(base), np.log(np.array([3, 1, 2]) / 6.0), rtol=1e-5
+    )
+
+
+def test_init_score_quantile_is_weighted_quantile():
+    y = jnp.asarray([0.0, 1.0, 2.0, 3.0], jnp.float32)
+    w = jnp.asarray([1.0, 1.0, 10.0, 1.0], jnp.float32)
+    base = Quantile(alpha=0.5).init_score(y, w)
+    assert float(base) == 2.0  # the heavy sample holds the weighted median
+
+
+# ------------------------------------------------------------ deprecation shim
+def test_legacy_loss_strings_resolve():
+    assert isinstance(SGBDTConfig(loss="logistic").obj, BinaryLogistic)
+    assert isinstance(SGBDTConfig(loss="mse").obj, SquaredError)
+    # objective wins over the legacy string when both are set
+    cfg = SGBDTConfig(loss="logistic", objective="multiclass:3")
+    assert cfg.n_outputs == 3
+    with pytest.raises(ValueError, match="unknown objective"):
+        SGBDTConfig(loss="hinge").obj
+
+
+# ------------------------------------------------------- multiclass end-to-end
+N_CLASSES = 3
+
+
+@pytest.fixture(scope="module")
+def mc_setup(tmp_path_factory):
+    from repro.checkpoint import save_pytree
+    from repro.core.async_sgbdt import train_async, worker_round_robin
+
+    data = D.make_multiclass_classification(500, 16, N_CLASSES, seed=2)
+    cfg = SGBDTConfig(
+        n_trees=24, step_length=0.3, sampling_rate=0.9,
+        objective=f"multiclass:{N_CLASSES}",
+        learner=LearnerConfig(depth=3, n_bins=64),
+    )
+    st_serial = train_serial(cfg, data, seed=0)
+    st_async = train_async(cfg, data, worker_round_robin(cfg.n_trees, 4), seed=0)
+    root = tmp_path_factory.mktemp("mc_ckpt")
+    save_pytree(root, cfg.n_trees, st_serial._asdict())
+    return cfg, data, st_serial, st_async, root
+
+
+def test_multiclass_beats_prior_both_trainers(mc_setup):
+    """Train accuracy must clearly beat the class prior via train_serial AND
+    train_async; loss must drop from the prior's."""
+    cfg, data, st_serial, st_async, _ = mc_setup
+    prior_acc = max(
+        float(jnp.mean(data.labels == k)) for k in range(N_CLASSES)
+    )
+    l0 = float(train_loss(cfg, data, init_state(cfg, data)))
+    for st in (st_serial, st_async):
+        m = train_metrics(cfg, data, st)
+        assert float(m["accuracy"]) > prior_acc + 0.2, (float(m["accuracy"]), prior_acc)
+        assert float(m["loss"]) < 0.7 * l0
+
+
+def test_multiclass_f_matches_forest_predict(mc_setup):
+    """The maintained (N, K) F field equals evaluating the K-output forest."""
+    from repro.trees import forest_predict
+
+    cfg, data, st, _, _ = mc_setup
+    pred = forest_predict(st.forest, data.bins)
+    assert pred.shape == st.f.shape == (data.n_samples, N_CLASSES)
+    np.testing.assert_allclose(np.asarray(pred), np.asarray(st.f), atol=1e-4)
+
+
+def test_multiclass_checkpoint_roundtrip_and_serving(mc_setup):
+    """TrainState checkpoint -> load_forest_checkpoint -> ForestServer with
+    the objective's link: served rows are (rows, K) softmax probabilities
+    matching training semantics, on both traversal backends."""
+    from repro.serving import ForestServer, PredictRequest, load_forest_checkpoint
+
+    cfg, data, st, _, root = mc_setup
+    forest = load_forest_checkpoint(root, cfg.n_trees, like=st.forest)
+    assert forest.n_outputs == N_CLASSES
+    assert int(forest.n_trees) == cfg.n_trees * N_CLASSES
+
+    rng = np.random.default_rng(0)
+    rows = rng.standard_normal((40, data.n_features)).astype(np.float32)
+    want = jax.nn.softmax(
+        np.asarray(
+            st.forest.base_score
+            + np.asarray(
+                _traverse_raw(st.forest, rows, data.bin_edges, backend="ref")
+            )
+        ),
+        axis=-1,
+    )
+    for backend in ("ref", "pallas"):
+        server = ForestServer(
+            forest, data.bin_edges, max_rows=64, backend=backend,
+            objective=cfg.obj,
+        )
+        out = server.run([PredictRequest(uid=0, x=rows)])[0]
+        assert out.scores.shape == (40, N_CLASSES)
+        np.testing.assert_allclose(
+            out.scores.sum(axis=1), 1.0, rtol=1e-5, atol=1e-5
+        )
+        np.testing.assert_allclose(out.scores, np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def _traverse_raw(forest, rows, edges, backend):
+    from repro.kernels import ops
+    from repro.trees.binning import apply_bins
+
+    bins = apply_bins(jnp.asarray(rows), edges)
+    return ops.forest_traverse(
+        bins, forest.feature, forest.threshold, forest.leaf_value,
+        forest.n_trees, forest.depth, backend=backend,
+        n_outputs=forest.n_outputs,
+    )
+
+
+def test_forest_server_rejects_output_mismatch(mc_setup):
+    """A K-output objective on a single-output forest (or vice versa) must
+    error at construction, not softmax across the wave."""
+    from repro.serving import ForestServer
+    from repro.trees.forest import empty_forest
+
+    cfg, data, st, _, _ = mc_setup
+    single = empty_forest(4, 3)
+    with pytest.raises(ValueError, match="outputs"):
+        ForestServer(single, data.bin_edges, objective=cfg.obj)
+    with pytest.raises(ValueError, match="outputs"):
+        ForestServer(st.forest, data.bin_edges, objective="logistic")
+
+
+# ------------------------------------------------------------------ ranking
+def test_lambdarank_improves_pairwise_accuracy():
+    data = D.make_ranking(30, 12, 10, seed=5)
+    cfg = SGBDTConfig(
+        n_trees=20, step_length=0.2, sampling_rate=0.9,
+        objective="lambdarank",
+        learner=LearnerConfig(depth=3, n_bins=64),
+    )
+    st = train_serial(cfg, data, seed=0)
+    m0 = train_metrics(cfg, data, init_state(cfg, data))
+    m1 = train_metrics(cfg, data, st)
+    assert float(m1["loss"]) < 0.7 * float(m0["loss"])
+    assert float(m1["pairwise_acc"]) > 0.8
+
+
+def test_lambdarank_requires_qid():
+    data = D.make_sparse_classification(60, 20, 5, seed=0)  # no qid
+    cfg = SGBDTConfig(n_trees=2, objective="lambdarank",
+                      learner=LearnerConfig(depth=2, n_bins=64))
+    with pytest.raises(ValueError, match="query ids"):
+        train_serial(cfg, data, seed=0)
+
+
+# ------------------------------------------------------------------ quantile
+def test_quantile_coverage_moves_toward_alpha():
+    data = D.make_sparse_regression(400, 100, 10, seed=6)
+    for alpha in (0.25, 0.75):
+        cfg = SGBDTConfig(
+            n_trees=25, step_length=0.1, sampling_rate=0.9,
+            objective=f"quantile:{alpha}",
+            learner=LearnerConfig(depth=3, n_bins=64),
+        )
+        st = train_serial(cfg, data, seed=0)
+        cover = float(train_metrics(cfg, data, st)["coverage"])
+        assert abs(cover - alpha) < 0.15, (alpha, cover)

@@ -46,10 +46,10 @@ def test_adamw_full_recipe():
 def test_clip_by_global_norm():
     opt = O.clip_by_global_norm(1.0)
     st_ = opt.init(TARGET)
-    g = jnp.asarray([30.0, 40.0, 0.0])    # norm 50
+    g = jnp.asarray([30.0, 40.0, 0.0])  # norm 50
     u, _ = opt.update(g, st_, TARGET)
     np.testing.assert_allclose(float(jnp.linalg.norm(u)), 1.0, rtol=1e-5)
-    u2, _ = opt.update(g / 100, st_, TARGET)   # below max: untouched
+    u2, _ = opt.update(g / 100, st_, TARGET)  # below max: untouched
     np.testing.assert_allclose(np.asarray(u2), np.asarray(g / 100), rtol=1e-5)
 
 
@@ -85,7 +85,7 @@ def test_delayed_applies_stale_gradient_exactly():
     applied = []
     for g in grads:
         u, st_ = opt.update(g, st_, w)
-        applied.append(float(-u[0]))     # sgd(1.0): update = -grad
+        applied.append(float(-u[0]))  # sgd(1.0): update = -grad
     assert applied == [0.0, 0.0, 1.0, 2.0, 3.0]
 
 

@@ -10,16 +10,16 @@ from repro.core.sgbdt import init_state, train_loss, train_serial
 def test_registry_matches_paper_settings():
     v = gbdt.EXPERIMENTS["validity-realsim"]
     assert v.config.n_trees == 400
-    assert v.config.learner.depth == 7          # 100 leaves -> 128 (2^7)
+    assert v.config.learner.depth == 7  # 100 leaves -> 128 (2^7)
     assert v.config.learner.feature_fraction == 0.8
     assert v.config.step_length == 0.01
 
     h = gbdt.EXPERIMENTS["validity-higgs"]
     assert h.config.n_trees == 1000
-    assert h.config.learner.depth == 5          # 20 leaves -> 32 (2^5)
+    assert h.config.learner.depth == 5  # 20 leaves -> 32 (2^5)
 
     e = gbdt.EXPERIMENTS["efficiency-realsim"]
-    assert e.config.learner.depth == 9          # 400 leaves -> 512 (2^9)
+    assert e.config.learner.depth == 9  # 400 leaves -> 512 (2^9)
     assert e.config.sampling_rate == 0.8
 
     assert gbdt.EXPERIMENTS["efficiency-e2006"].config.loss == "mse"
@@ -28,7 +28,7 @@ def test_registry_matches_paper_settings():
 @pytest.mark.parametrize("name", ["validity-realsim", "efficiency-e2006"])
 def test_quick_variant_trains(name):
     cfg, data = gbdt.get(name, quick=True)
-    cfg = cfg._replace(n_trees=15, step_length=0.2)   # CI-size
+    cfg = cfg._replace(n_trees=15, step_length=0.2)  # CI-size
     st = train_serial(cfg, data, seed=0)
     l0 = float(train_loss(cfg, data, init_state(cfg, data)))
     l1 = float(train_loss(cfg, data, st))

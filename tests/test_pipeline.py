@@ -37,7 +37,7 @@ def test_packing_segments_monotone_within_row():
     for row in segments:
         nz = row[row > 0]
         assert (np.diff(nz) >= 0).all()
-        assert nz[0] == 1                     # segment ids restart per row
+        assert nz[0] == 1  # segment ids restart per row
 
 
 def test_packing_no_crossdoc_leak_markers():

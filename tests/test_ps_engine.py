@@ -137,13 +137,13 @@ def test_resolve_schedule_specs():
 
 def test_resolve_schedule_rejects_bad():
     with pytest.raises(ValueError):
-        resolve_schedule(np.arange(5), 10)            # wrong length
+        resolve_schedule(np.arange(5), 10)  # wrong length
     with pytest.raises(ValueError):
-        resolve_schedule(np.arange(10) + 1, 10)       # k(j) > j
+        resolve_schedule(np.arange(10) + 1, 10)  # k(j) > j
     with pytest.raises(ValueError):
-        resolve_schedule(np.full(10, -1), 10)         # negative version
+        resolve_schedule(np.full(10, -1), 10)  # negative version
     with pytest.raises(ValueError):
-        resolve_schedule(("warp", 3), 10)             # unknown closed form
+        resolve_schedule(("warp", 3), 10)  # unknown closed form
     assert max_staleness(worker_round_robin(16, 4)) == 3
 
 

@@ -65,8 +65,8 @@ def test_diversity_ordering():
     larger Delta and rho than high-diversity (m_i = 1) datasets at the same
     sampling rate."""
     rate = 0.1
-    high_div = jnp.ones(10_000)                  # 10k distinct samples
-    low_div = jnp.full(10, 1_000.0)              # 10 distinct, m_i = 1000
+    high_div = jnp.ones(10_000)  # 10k distinct samples
+    low_div = jnp.full(10, 1_000.0)  # 10 distinct, m_i = 1000
     s_high = diversity_stats(rate, high_div)
     s_low = diversity_stats(rate, low_div)
     assert float(s_low["delta"]) > float(s_high["delta"])

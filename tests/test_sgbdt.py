@@ -79,7 +79,7 @@ def test_constant_delay_schedule():
 
 def test_round_robin_schedule():
     s = worker_round_robin(8, 1)
-    assert (s == np.arange(8)).all()       # serial: zero staleness
+    assert (s == np.arange(8)).all()  # serial: zero staleness
     s4 = worker_round_robin(8, 4)
     assert (s4 == np.array([0, 0, 0, 0, 1, 2, 3, 4])).all()
     assert max_staleness(s4) == 4 - 1 + 0 or max_staleness(s4) >= 3
@@ -90,7 +90,7 @@ def test_stale_round_uses_stale_target(fast_cfg, sparse_data):
     state = init_state(fast_cfg, sparse_data)
     key = jax.random.PRNGKey(7)
     fresh = sgbdt_round(fast_cfg, sparse_data, state, state.f, key)
-    stale_target = state.f + 5.0            # wildly different target
+    stale_target = state.f + 5.0  # wildly different target
     stale = sgbdt_round(fast_cfg, sparse_data, state, stale_target, key)
     assert not np.allclose(np.asarray(fresh.f), np.asarray(stale.f))
 

@@ -21,8 +21,8 @@ def test_async_makespan_scales_with_workers():
     m1 = simulate_async(_spec(1), 200).makespan
     m8 = simulate_async(_spec(8), 200).makespan
     m32 = simulate_async(_spec(32), 200).makespan
-    assert m8 < m1 / 4          # near-linear early
-    assert m32 < m8             # still improving
+    assert m8 < m1 / 4  # near-linear early
+    assert m32 < m8  # still improving
 
 
 def test_async_staleness_tracks_worker_count():
@@ -35,7 +35,7 @@ def test_async_staleness_tracks_worker_count():
 def test_async_schedule_is_valid():
     res = simulate_async(_spec(8), 300)
     j = np.arange(300)
-    assert (res.schedule <= j).all()        # k(j) <= j
+    assert (res.schedule <= j).all()  # k(j) <= j
     # locally jittered (network noise) but globally advancing
     assert res.schedule[-50:].mean() > res.schedule[:50].mean() + 100
     assert res.schedule[-1] >= 300 - 8 * 3  # tail staleness bounded ~W
@@ -74,8 +74,8 @@ def test_speedup_models_shapes():
     s = speedup_model_sync(w, 1.0, 0.02, 0.01)
     d = speedup_model_dimboost(w, 1.0, 0.02, 0.01)
     assert a[0] == pytest.approx(1.0, rel=0.1)
-    assert (np.diff(a) >= -1e-9).all()          # monotone
-    assert a[-1] > s[-1] and a[-1] > d[-1]      # async wins at 32 (paper Fig. 10)
+    assert (np.diff(a) >= -1e-9).all()  # monotone
+    assert a[-1] > s[-1] and a[-1] > d[-1]  # async wins at 32 (paper Fig. 10)
     # DimBoost's centralized comm makes it degrade hardest at scale
     assert d[-1] < s[-1] * 1.5
 

@@ -45,7 +45,7 @@ def test_tree_fits_axis_aligned_step(key):
     target = jnp.where(bins[:, 2] > 13, 2.0, -1.0)
     tree = build_tree(
         LearnerConfig(depth=3, n_bins=32, lam=0.0, feature_fraction=1.0),
-        bins, -target, jnp.ones(400), key,   # g = -target => leaf = mean target
+        bins, -target, jnp.ones(400), key,  # g = -target => leaf = mean target
     )
     pred = apply_tree(tree, bins)
     np.testing.assert_allclose(np.asarray(pred), np.asarray(target), atol=1e-5)
@@ -82,7 +82,7 @@ def test_leaf_routing_partition(key):
 def test_unsplittable_node_passthrough(key):
     """Constant gradients -> no split gain -> all samples route left and the
     single active leaf predicts the regularized mean."""
-    bins = jnp.zeros((100, 3), jnp.int32)   # all samples identical
+    bins = jnp.zeros((100, 3), jnp.int32)  # all samples identical
     g = jnp.ones(100)
     h = jnp.ones(100)
     tree = build_tree(
