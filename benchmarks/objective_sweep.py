@@ -18,7 +18,7 @@ from __future__ import annotations
 import repro.data as D
 from benchmarks.common import save
 from repro.core.sgbdt import SGBDTConfig, init_state, train_metrics
-from repro.ps import Trainer
+from repro.ps import clear_trainers, get_trainer
 from repro.trees.learner import LearnerConfig
 
 WORKERS = 8
@@ -59,7 +59,7 @@ def run(quick: bool = True) -> dict:
             objective=spec,
             learner=LearnerConfig(depth=4, n_bins=64, feature_fraction=0.9),
         )
-        trainer = Trainer(cfg)
+        trainer = get_trainer(cfg)
         init_m = train_metrics(cfg, data, init_state(cfg, data))
         serial = train_metrics(cfg, data, trainer.train(data, ("round_robin", 1)))
         asynch = train_metrics(
@@ -81,6 +81,9 @@ def run(quick: bool = True) -> dict:
         )
         assert row["serial"]["loss"] < row["init"]["loss"], tag
         assert row[f"async_w{WORKERS}"]["loss"] < row["init"]["loss"], tag
+        # one config per objective — release its Trainer's compiled programs
+        # instead of letting the sweep accumulate them.
+        clear_trainers()
     save("objective_sweep", out)
     return out
 

@@ -4,6 +4,7 @@ from repro.checkpoint.store import (
     latest_step,
     restore_pytree,
     save_pytree,
+    step_dir,
 )
 
 __all__ = [
@@ -11,4 +12,5 @@ __all__ = [
     "latest_step",
     "restore_pytree",
     "save_pytree",
+    "step_dir",
 ]

@@ -72,8 +72,7 @@ def save_pytree(root: str | pathlib.Path, step: int, tree, *, crc: bool = True):
 
 def restore_pytree(root: str | pathlib.Path, step: int, like, *, check_crc: bool = False):
     """Restore into the structure (and leaf shapes/dtypes) of ``like``."""
-    root = pathlib.Path(root)
-    d = root / f"step_{step:06d}"
+    d = step_dir(root, step)
     manifest = json.loads((d / "manifest.json").read_text())
     paths, leaves, treedef = _leaves_with_paths(like)
     entries = {e["path"]: e for e in manifest["leaves"]}
@@ -99,15 +98,46 @@ def restore_pytree(root: str | pathlib.Path, step: int, like, *, check_crc: bool
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def _step_entries(root: pathlib.Path) -> list[tuple[int, pathlib.Path]]:
+    """``(step, path)`` for every ``step_<digits>`` child, sorted by step.
+
+    Tolerant by design: a checkpoint root is shared real estate — a foreign
+    ``step_final/`` symlink, an editor's ``step_backup`` dir, a stray file —
+    and both GC and the serving hot-swap poll walk it continuously. Anything
+    whose suffix is not purely numeric is somebody else's; skip it rather
+    than crash on ``int()``.
+    """
+    out = []
+    for p in root.iterdir():
+        suffix = p.name[5:]
+        if p.name.startswith("step_") and suffix.isdigit() and p.is_dir():
+            out.append((int(suffix), p))
+    out.sort()
+    return out
+
+
+def step_dir(root: str | pathlib.Path, step: int) -> pathlib.Path:
+    """Resolve the directory holding ``step``: the canonical zero-padded
+    name, or any numeric ``step_*`` entry with the same value. Entries
+    written by other tools may be unpadded; ``latest_step`` reports them,
+    so every loader must be able to open them."""
+    root = pathlib.Path(root)
+    canonical = root / f"step_{step:06d}"
+    if canonical.exists() or not root.exists():
+        return canonical
+    for s, p in _step_entries(root):
+        if s == step:
+            return p
+    return canonical  # missing either way; let the caller raise naturally
+
+
 def latest_step(root: str | pathlib.Path) -> int | None:
     root = pathlib.Path(root)
     if not root.exists():
         return None
-    steps = sorted(
-        int(p.name.split("_")[1])
-        for p in root.iterdir()
-        if p.name.startswith("step_") and (p / "manifest.json").exists()
-    )
+    steps = [
+        s for s, p in _step_entries(root) if (p / "manifest.json").exists()
+    ]
     return steps[-1] if steps else None
 
 
@@ -133,11 +163,7 @@ class CheckpointManager:
         return step, restore_pytree(self.root, step, like)
 
     def _gc(self) -> None:
-        root = pathlib.Path(self.root)
-        steps = sorted(
-            int(p.name.split("_")[1])
-            for p in root.iterdir()
-            if p.name.startswith("step_")
-        )
-        for s in steps[: -self.keep]:
-            shutil.rmtree(root / f"step_{s:06d}", ignore_errors=True)
+        # Remove by the entry's OWN path (a dir named step_7 is step 7 even
+        # unpadded); foreign step_* entries are skipped by _step_entries.
+        for _, p in _step_entries(pathlib.Path(self.root))[: -self.keep]:
+            shutil.rmtree(p, ignore_errors=True)

@@ -93,6 +93,43 @@ def simulate_async(spec: ClusterSpec, n_trees: int) -> SimResult:
     )
 
 
+def staleness_stats(schedule) -> dict:
+    """Mean/max staleness + histogram of a realized or simulated k(j)."""
+    schedule = np.asarray(schedule)
+    stale = np.arange(len(schedule)) - schedule
+    taus, counts = np.unique(stale, return_counts=True)
+    return {
+        "mean_staleness": float(stale.mean()),
+        "max_staleness": int(stale.max()),
+        "histogram": {int(t): int(c) for t, c in zip(taus, counts)},
+    }
+
+
+def crossvalidate_schedule(
+    schedule, spec: ClusterSpec, makespan: float | None = None
+) -> dict:
+    """Validate the event model against a *measured* run.
+
+    ``schedule`` is a realized k(j) (e.g. ``ps.runtime.RunTrace.schedule``)
+    and ``spec`` the cluster geometry measured from the same run; the
+    simulator predicts a schedule for that geometry and both staleness
+    distributions are reported side by side — the same shape of check
+    Block-distributed GBT runs between its communication model and real
+    cluster traces.
+    """
+    sim = simulate_async(spec, len(np.asarray(schedule)))
+    out = {
+        "spec": dataclasses.asdict(spec),
+        "realized": staleness_stats(schedule),
+        "simulated": staleness_stats(sim.schedule),
+        "simulated_makespan": float(sim.makespan),
+    }
+    if makespan is not None:
+        out["realized_makespan"] = float(makespan)
+        out["makespan_ratio"] = float(makespan) / max(float(sim.makespan), 1e-12)
+    return out
+
+
 def simulate_sync(
     spec: ClusterSpec,
     n_trees: int,

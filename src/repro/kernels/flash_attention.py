@@ -110,9 +110,11 @@ def flash_attention_pallas(
     block_q: int = 128,
     block_k: int = 128,
     group: int = 1,  # q heads per kv head (GQA); BH = BKV * group
-    interpret: bool = True,
+    interpret: bool | None = None,  # None: Mosaic on TPU, interpreter elsewhere
     seq_k: int | None = None,  # true (pre-padding) kv length for masking
 ) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     bh, sq, d = q.shape
     bkv, sk, _ = k.shape
     assert bh == bkv * group
@@ -281,11 +283,13 @@ def flash_attention_bwd_pallas(
     block_q: int = 128,
     block_k: int = 128,
     group: int = 1,
-    interpret: bool = True,
+    interpret: bool | None = None,  # None: Mosaic on TPU, interpreter elsewhere
     seq_k: int | None = None,
     seq_q: int | None = None,
 ):
     """-> (dq, dk, dv). Shapes as the forward; lse (BH, Sq) f32."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     bh, sq, d = q.shape
     bkv, sk, _ = k.shape
     nq, nk = sq // block_q, sk // block_k

@@ -99,11 +99,16 @@ def forest_traverse_pallas(
     depth: int,
     sample_block: int = 256,
     tree_block: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
     n_outputs: int = 1,
 ) -> jax.Array:
     """Masked forest sum (N,) f32 — or (N, K) with ``n_outputs`` = K > 1,
-    where slot t reduces into output column t % K. See module docstring."""
+    where slot t reduces into output column t % K. See module docstring.
+
+    ``interpret=None`` auto-detects (Mosaic on TPU, interpreter elsewhere).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     n, f = bins.shape
     t, n_int = feature.shape
     n_leaf = leaf_value.shape[1]

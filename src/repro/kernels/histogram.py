@@ -77,9 +77,16 @@ def histogram_pallas(
     n_bins: int,
     sample_block: int = 512,
     feature_block: int = 8,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Returns (2, n_nodes, F, n_bins) f32 histograms. See module docstring."""
+    """Returns (2, n_nodes, F, n_bins) f32 histograms. See module docstring.
+
+    ``interpret=None`` auto-detects: compile to Mosaic on TPU, run the
+    Pallas interpreter elsewhere — so direct callers (tests, benches) get
+    the real kernel on real hardware instead of silently interpreting.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     n, f = bins.shape
     assert n % sample_block == 0, "wrapper must pad samples"
     assert f % feature_block == 0, "wrapper must pad features"

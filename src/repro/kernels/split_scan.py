@@ -49,9 +49,14 @@ def split_gain_pallas(
     min_child_hess: jax.Array,
     node_block: int = 8,
     feature_block: int = 8,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Gain surface (L, F, B); invalid split points are -inf."""
+    """Gain surface (L, F, B); invalid split points are -inf.
+
+    ``interpret=None`` auto-detects (Mosaic on TPU, interpreter elsewhere).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     _, l, f, b = hist.shape
     assert l % node_block == 0 and f % feature_block == 0
     lam2 = jnp.asarray(lam, jnp.float32).reshape(1, 1)

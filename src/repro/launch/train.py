@@ -84,6 +84,13 @@ def run_gbdt(args) -> None:
     ``--objective`` selects the training objective (and a matched synthetic
     workload): ``logistic`` (default), ``mse``, ``quantile[:a]``,
     ``huber``, ``multiclass:K``, ``lambdarank``.
+
+    ``--runtime threads`` swaps the simulated delay schedule for the REAL
+    host-async runtime (``repro.ps.runtime``): W worker threads race the
+    server fold loop, the realized k(j) is recorded, and (with
+    ``--verify-replay``) the trace is replayed through the deterministic
+    engine and checked bit-for-bit against the threaded forest.
+    ``--trace-out FILE`` dumps the RunTrace JSON.
     """
     from repro.core.sgbdt import SGBDTConfig, train_loss, train_metrics
     from repro.ps import Trainer
@@ -97,6 +104,8 @@ def run_gbdt(args) -> None:
         objective=args.objective,
         learner=LearnerConfig(depth=6, n_bins=64, feature_fraction=0.8),
     )
+    if args.runtime == "threads":
+        return run_gbdt_threads(args, cfg, data, obj)
     trainer = Trainer(cfg)
     schedule = ("round_robin", args.workers)
     print(f"gbdt[{obj.name}, K={obj.n_outputs}]: {args.steps} rounds, "
@@ -121,6 +130,50 @@ def run_gbdt(args) -> None:
     assert np.isfinite(float(train_loss(cfg, data, state))), "training diverged"
 
 
+def run_gbdt_threads(args, cfg, data, obj) -> None:
+    """The real host-async PS runtime: threads, recorded k(j), optional
+    bitwise replay verification."""
+    from repro.core.sgbdt import train_loss
+    from repro.ps import AsyncRuntime
+
+    rt = AsyncRuntime(cfg, data, n_workers=args.workers)
+    print(f"gbdt[{obj.name}, K={obj.n_outputs}]: {cfg.n_trees} rounds, "
+          f"{args.workers} REAL worker threads (host-async runtime)")
+    state, trace = rt.run(seed=args.seed)
+    s = trace.summary()
+    print(f"makespan {s['makespan_s']:.2f}s  "
+          f"staleness mean {s['mean_staleness']:.2f} max {s['max_staleness']}  "
+          f"build {s['t_build_mean_s']*1e3:.1f}ms "
+          f"queue {s['t_queue_mean_s']*1e3:.1f}ms "
+          f"fold {s['t_fold_mean_s']*1e3:.1f}ms")
+    print(f"staleness histogram: {trace.staleness_histogram()}")
+    loss = float(train_loss(cfg, data, state))
+    print(f"final train loss {loss:.4f}")
+    assert np.isfinite(loss), "training diverged"
+    if args.trace_out:
+        path = trace.save(args.trace_out)
+        print(f"trace -> {path}")
+    if args.verify_replay:
+        st_replay, _ = rt.replay(trace)
+        identical = (
+            np.array_equal(np.asarray(state.f), np.asarray(st_replay.f))
+            and np.array_equal(
+                np.asarray(state.forest.leaf_value),
+                np.asarray(st_replay.forest.leaf_value),
+            )
+            and np.array_equal(
+                np.asarray(state.forest.feature),
+                np.asarray(st_replay.forest.feature),
+            )
+            and np.array_equal(
+                np.asarray(state.forest.threshold),
+                np.asarray(st_replay.forest.threshold),
+            )
+        )
+        print(f"record-and-replay identical forest: {identical}")
+        assert identical, "replay drifted from the threaded run"
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b")
@@ -143,6 +196,18 @@ def main() -> None:
                     help="parameter-server worker count (--arch gbdt)")
     ap.add_argument("--scan", action="store_true",
                     help="run the GBDT trainer in its lax.scan form")
+    ap.add_argument("--runtime", choices=("simulated", "threads"),
+                    default="simulated",
+                    help="PS execution: 'simulated' replays a delay "
+                         "schedule; 'threads' runs real worker threads and "
+                         "records the realized k(j) (--arch gbdt)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the realized RunTrace JSON here "
+                         "(--runtime threads)")
+    ap.add_argument("--verify-replay", action="store_true",
+                    help="replay the recorded trace through the "
+                         "deterministic engine and assert the forests are "
+                         "bit-identical (--runtime threads)")
     ap.add_argument("--objective", default="logistic",
                     help="GBDT objective registry spec: logistic | mse | "
                          "quantile[:a] | huber | multiclass:K | lambdarank")

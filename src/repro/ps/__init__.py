@@ -6,17 +6,23 @@
                     arrays, or on-the-spot cluster simulation.
   * ``worker``    — the worker pool as one vmapped multi-tree build
                     (the executable Fig. 10 speedup path).
+  * ``runtime``   — REAL host asynchrony: W worker threads race a server
+                    fold loop, the realized k(j) is recorded into a
+                    ``RunTrace``, and replaying the trace through the
+                    deterministic engine reproduces the forest exactly.
   * ``sharded``   — shard_map data-parallel builds: per-shard histogram
                     kernels merged with a psum over the 'data' mesh axis.
 """
 from repro.ps.engine import (
     Trainer,
+    clear_trainers,
     get_trainer,
     propose_tree,
     round_body,
     server_fold,
     train,
 )
+from repro.ps.runtime import AsyncRuntime, RunTrace, replay_trace
 from repro.ps.schedules import (
     constant_delay,
     max_staleness,
@@ -27,7 +33,11 @@ from repro.ps.sharded import build_histogram_sharded, make_sharded_builder
 from repro.ps.worker import build_trees_batched, train_worker_parallel
 
 __all__ = [
+    "AsyncRuntime",
+    "RunTrace",
+    "replay_trace",
     "Trainer",
+    "clear_trainers",
     "get_trainer",
     "propose_tree",
     "round_body",

@@ -28,6 +28,7 @@ of one server NIC.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import Callable
 
 import jax
@@ -60,17 +61,28 @@ def propose_tree(
     K-output objectives fit one tree per output against the (N, K)
     gradient field — a vmapped stacked build, still ONE push: the K trees
     travel as one stacked ``Tree`` group with a (N, K) delta.
+
+    The step length v is applied HERE, to the leaf table, not by the
+    server: ``delta`` gathers pre-scaled leaves, so the server fold is a
+    pure add. This is what keeps every execution form bit-identical — a
+    ``v * delta`` multiply next to the fold's add is FMA-contractable, and
+    XLA contracts it in some programs (a small standalone fold) but not
+    others (the fused scan body), which would break the threaded runtime's
+    record-and-replay contract. ``round(v*leaf)[idx] == round(v*leaf[idx])``
+    elementwise, so the trained values are unchanged.
     """
     obj = cfg.obj
     r_sample, r_feat = jax.random.split(rng)
     m_prime, _ = bernoulli_weights(r_sample, cfg.sampling_rate, data.multiplicity)
     g, h = obj.grad_hess(data.labels, f_target, qid=data.qid)
+    v = jnp.float32(cfg.step_length)
     if obj.n_outputs == 1:
         hess_w = m_prime * h if cfg.step_kind == "newton" else m_prime
         if builder is None:
             tree = build_tree(cfg.learner, data.bins, m_prime * g, hess_w, r_feat)
         else:
             tree = builder(data.bins, m_prime * g, hess_w, r_feat)
+        tree = tree._replace(leaf_value=v * tree.leaf_value)
         return tree, apply_tree(tree, data.bins)
     g_w = m_prime[:, None] * g
     if cfg.step_kind == "newton":
@@ -87,30 +99,35 @@ def propose_tree(
             for k in range(obj.n_outputs)
         ]
         trees = jax.tree.map(lambda *xs: jnp.stack(xs), *built)
+    trees = trees._replace(leaf_value=v * trees.leaf_value)
     return trees, apply_tree_stack(trees, data.bins)
 
 
 def server_fold(cfg, forest, f_live, tree, delta):
     """Server side: F <- F + v * Tree (Algorithm 3, server step 2).
 
-    The barrier pins the scaled delta to a rounded f32 value before the
-    add, so XLA cannot contract the multiply-add into an FMA in one
-    execution form (per-round loop) but not another (scan / vmapped worker
-    blocks): the fold itself is bit-identical everywhere, and cross-form
-    drift is confined to the tree-build pipeline's compilation.
+    The pushed tree's leaves arrive pre-scaled by v (see ``propose_tree``),
+    so the fold is a PURE ADD plus a slot write — deliberately: a lone add
+    whose other operand crosses a gather cannot be FMA-contracted, so this
+    fold computes the identical f32 value whether it is compiled standalone
+    (the threaded runtime's server program), in the per-round loop, in the
+    fused lax.scan replay, or inside a vmapped worker block.
     """
-    scaled = jax.lax.optimization_barrier(jnp.float32(cfg.step_length) * delta)
-    return (
-        forest_push(forest, tree, jnp.float32(cfg.step_length)),
-        f_live + scaled,
-    )
+    return forest_push(forest, tree, jnp.float32(1.0)), f_live + delta
 
 
 def round_body(cfg, data, forest, f_live, f_target, rng, builder=None):
     """One boosting round. Splitting ``f_target`` from ``f_live`` is what
     makes this body shared between every trainer: the tree is built against
-    (possibly stale) ``f_target`` but folded into the live server state."""
+    (possibly stale) ``f_target`` but folded into the live server state.
+
+    The barrier pins the worker->server seam: the threaded runtime
+    (``ps.runtime``) compiles ``propose_tree`` and ``server_fold`` as two
+    separate programs, so the fused forms must not let XLA optimize across
+    that boundary or record-and-replay would drift by compilation form.
+    """
     tree, delta = propose_tree(cfg, data, f_target, rng, builder)
+    tree, delta = jax.lax.optimization_barrier((tree, delta))
     return server_fold(cfg, forest, f_live, tree, delta)
 
 
@@ -258,14 +275,33 @@ class Trainer:
 
 # One cached Trainer per config so the legacy shims share jit caches the way
 # the old module-level ``@jax.jit(static_argnames=('cfg', ...))`` entry
-# points did.
-_TRAINERS: dict[SGBDTConfig, Trainer] = {}
+# points did. The cache is LRU-bounded: each Trainer pins its compiled
+# programs, so an unbounded dict leaks executables linearly in any config
+# sweep (objective_sweep, fig10 --objective, hyperparameter scans).
+_TRAINERS: "OrderedDict[SGBDTConfig, Trainer]" = OrderedDict()
+_TRAINERS_MAX = 8
 
 
 def get_trainer(cfg: SGBDTConfig) -> Trainer:
-    if cfg not in _TRAINERS:
-        _TRAINERS[cfg] = Trainer(cfg)
-    return _TRAINERS[cfg]
+    trainer = _TRAINERS.get(cfg)
+    if trainer is None:
+        trainer = Trainer(cfg)
+        _TRAINERS[cfg] = trainer
+        while len(_TRAINERS) > _TRAINERS_MAX:
+            _TRAINERS.popitem(last=False)
+    else:
+        _TRAINERS.move_to_end(cfg)
+    return trainer
+
+
+def clear_trainers() -> None:
+    """Drop every cached Trainer (and the jit executables it pins).
+
+    Config sweeps should call this between unrelated configs; pytest /
+    benchmark processes that iterate many ``SGBDTConfig``s otherwise hold
+    compiled programs for configs that will never run again.
+    """
+    _TRAINERS.clear()
 
 
 def train(

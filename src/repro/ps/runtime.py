@@ -1,0 +1,345 @@
+"""Host-asynchronous parameter-server runtime: real threads, recorded k(j).
+
+Everything else in ``repro.ps`` *replays* a delay schedule — the simulator
+invents k(j), the engine executes it deterministically. This module is the
+other half of the paper's claim: W real worker threads race a server fold
+loop, and the version map k(j) is *realized* by the race, not chosen.
+
+Roles (Algorithm 3, but actually concurrent):
+
+  worker thread  — atomically grab a build ticket ``i`` and a snapshot of
+                   the freshest ``(version, F)`` pair, build a tree from it
+                   with the ticket's PRNG key (the jitted ``propose_tree``,
+                   so concurrent builds overlap in XLA's thread pool), and
+                   push ``(ticket, pulled_version, tree, delta)`` onto the
+                   server queue;
+  server loop    — pop pushes in arrival order, fold each via the jitted
+                   ``server_fold``, publish the bumped ``(version, F)``,
+                   and append one ``RunTrace`` row.
+
+Determinism by record-and-replay: the interleaving is nondeterministic,
+but every folded tree is a pure function of ``(F^{k(j)}, keys[i(j)])``.
+``RunTrace`` records the realized schedule k(j) and the ticket permutation
+i(j); replaying them through ``Trainer.scan_with`` (one fused lax.scan)
+reproduces the threaded run's forest bit for bit. The propose/fold seam is
+pinned with an ``optimization_barrier`` in ``engine.round_body`` so the
+split-program runtime and the fused replay cannot drift by compilation
+form. That replay contract is the core correctness test
+(tests/test_runtime.py) and the debugging story: any nondeterministic run
+can be re-executed deterministically from its trace.
+
+The trace also carries measured per-phase wall times, which parameterize
+``core.simulator.ClusterSpec`` — realized staleness vs. the event model's
+prediction for the same geometry is the cross-validation
+(``RunTrace.crossvalidate`` / ``benchmarks.fig10_speedup`` row
+``runtime_measured``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import queue
+import threading
+import time
+from typing import Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sgbdt import SGBDTConfig, TrainState, init_state
+from repro.ps.engine import Trainer, propose_tree, server_fold
+from repro.ps.schedules import max_staleness, resolve_schedule
+from repro.trees.binning import BinnedData
+
+_TRACE_VERSION = 1
+_TRACE_ARRAYS = {
+    "schedule": np.int32,
+    "key_index": np.int32,
+    "worker": np.int32,
+    "t_build": np.float64,
+    "t_queue": np.float64,
+    "t_fold": np.float64,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class RunTrace:
+    """The realized execution of one threaded run — enough to replay it.
+
+    Row j describes server update j (fold order):
+      schedule[j]  — k(j): the version the folded tree was built from;
+      key_index[j] — i(j): the build ticket, i.e. ``keys[i(j)]`` was the
+                     round key (a permutation of ``arange(n_trees)``);
+      worker[j]    — which worker thread built it;
+      t_build[j]   — wall seconds of the (blocking) jitted build;
+      t_queue[j]   — push-to-fold-start wait in the server queue;
+      t_fold[j]    — wall seconds of the jitted server fold.
+    """
+
+    n_workers: int
+    seed: int
+    schedule: np.ndarray
+    key_index: np.ndarray
+    worker: np.ndarray
+    t_build: np.ndarray
+    t_queue: np.ndarray
+    t_fold: np.ndarray
+    makespan: float
+
+    @property
+    def n_trees(self) -> int:
+        return len(self.schedule)
+
+    @property
+    def staleness(self) -> np.ndarray:
+        return np.arange(self.n_trees) - self.schedule
+
+    @property
+    def ring_size(self) -> int:
+        return max_staleness(self.schedule) + 1
+
+    def staleness_histogram(self) -> dict[int, int]:
+        return self._staleness_stats()["histogram"]
+
+    def _staleness_stats(self) -> dict:
+        from repro.core.simulator import staleness_stats
+
+        return staleness_stats(self.schedule)
+
+    def cluster_spec(self, **overrides):
+        """A ``ClusterSpec`` parameterized by this run's measured phases.
+
+        ``t_comm`` maps to the in-process queue handoff (there is no wire
+        here); jitter/spread coefficients keep their defaults unless
+        overridden.
+        """
+        from repro.core.simulator import ClusterSpec
+
+        args = dict(
+            n_workers=self.n_workers,
+            t_build=float(self.t_build.mean()),
+            t_comm=float(self.t_queue.mean()),
+            t_server=float(self.t_fold.mean()),
+            seed=self.seed,
+        )
+        args.update(overrides)
+        return ClusterSpec(**args)
+
+    def crossvalidate(self, **spec_overrides) -> dict:
+        """Realized staleness vs. the event-driven simulator's prediction
+        for the same cluster geometry (``core.simulator.crossvalidate_schedule``)."""
+        from repro.core.simulator import crossvalidate_schedule
+
+        return crossvalidate_schedule(
+            self.schedule, self.cluster_spec(**spec_overrides), makespan=self.makespan
+        )
+
+    def summary(self) -> dict:
+        stats = self._staleness_stats()
+        return {
+            "n_trees": self.n_trees,
+            "n_workers": self.n_workers,
+            "makespan_s": float(self.makespan),
+            "mean_staleness": stats["mean_staleness"],
+            "max_staleness": stats["max_staleness"],
+            "t_build_mean_s": float(self.t_build.mean()),
+            "t_queue_mean_s": float(self.t_queue.mean()),
+            "t_fold_mean_s": float(self.t_fold.mean()),
+        }
+
+    # ------------------------------------------------------------- trace io
+    def to_json(self) -> dict:
+        out = {
+            "trace_version": _TRACE_VERSION,
+            "n_workers": self.n_workers,
+            "seed": self.seed,
+            "makespan": float(self.makespan),
+            "summary": self.summary(),
+            "staleness_histogram": {
+                str(k): v for k, v in self.staleness_histogram().items()
+            },
+        }
+        for name in _TRACE_ARRAYS:
+            out[name] = np.asarray(getattr(self, name)).tolist()
+        return out
+
+    def save(self, path: str | pathlib.Path) -> pathlib.Path:
+        path = pathlib.Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(self.to_json(), indent=1))
+        return path
+
+    @classmethod
+    def load(cls, path: str | pathlib.Path) -> "RunTrace":
+        d = json.loads(pathlib.Path(path).read_text())
+        return cls(
+            n_workers=int(d["n_workers"]),
+            seed=int(d["seed"]),
+            makespan=float(d["makespan"]),
+            **{
+                name: np.asarray(d[name], dtype)
+                for name, dtype in _TRACE_ARRAYS.items()
+            },
+        )
+
+
+class AsyncRuntime:
+    """W real worker threads against a server fold loop, with tracing.
+
+    ``worker_delay`` injects stragglers: ``{worker_id: seconds}`` slept
+    inside that worker's build phase (between pull and push), modeling a
+    slow node — its pushes arrive late and stale while the fast workers
+    keep folding.
+    """
+
+    def __init__(
+        self,
+        cfg: SGBDTConfig,
+        data: BinnedData,
+        n_workers: int,
+        *,
+        worker_delay: Mapping[int, float] | Sequence[float] | None = None,
+    ):
+        if n_workers < 1:
+            raise ValueError(f"need >= 1 worker, got {n_workers}")
+        self.cfg = cfg
+        self.data = data
+        self.n_workers = n_workers
+        if worker_delay is None:
+            self._delay = {}
+        elif isinstance(worker_delay, Mapping):
+            self._delay = dict(worker_delay)
+        else:
+            self._delay = dict(enumerate(worker_delay))
+        # Worker and server compile their halves of engine.round_body as
+        # separate programs; the seam barrier in round_body keeps them
+        # bit-compatible with the fused replay program.
+        self._propose = jax.jit(
+            lambda data, f_target, rng: propose_tree(cfg, data, f_target, rng)
+        )
+        self._fold = jax.jit(
+            lambda forest, f, tree, delta: server_fold(cfg, forest, f, tree, delta)
+        )
+        self.trainer = Trainer(cfg)
+
+    # ----------------------------------------------------------------- run
+    def run(self, seed: int = 0) -> tuple[TrainState, RunTrace]:
+        cfg, data = self.cfg, self.data
+        n_trees = cfg.n_trees
+        keys = jax.random.split(jax.random.PRNGKey(seed), n_trees)
+        state = init_state(cfg, data)
+
+        # Warm the two jit caches outside the timed region so the first
+        # worker does not record a compile as a build.
+        tree0, delta0 = self._propose(data, state.f, keys[0])
+        jax.block_until_ready(
+            self._fold(state.forest, state.f, tree0, delta0)
+        )
+
+        lock = threading.Lock()  # guards (ticket, version, live f)
+        pushes: "queue.Queue[tuple]" = queue.Queue()
+        shared = {"ticket": 0, "version": 0, "f": state.f}
+        errors: list[BaseException] = []
+
+        def worker(w: int) -> None:
+            delay = float(self._delay.get(w, 0.0))
+            try:
+                while True:
+                    with lock:
+                        i = shared["ticket"]
+                        if i >= n_trees:
+                            return
+                        shared["ticket"] = i + 1
+                        pulled_version = shared["version"]
+                        f_snapshot = shared["f"]
+                    t0 = time.perf_counter()
+                    if delay:
+                        time.sleep(delay)
+                    tree, delta = self._propose(data, f_snapshot, keys[i])
+                    jax.block_until_ready(delta)
+                    t_build = time.perf_counter() - t0
+                    pushes.put(
+                        (i, pulled_version, w, tree, delta, t_build,
+                         time.perf_counter())
+                    )
+            except BaseException as e:  # surface worker crashes to the server
+                errors.append(e)
+                pushes.put(None)
+
+        threads = [
+            threading.Thread(target=worker, args=(w,), daemon=True)
+            for w in range(self.n_workers)
+        ]
+        t_start = time.perf_counter()
+        for t in threads:
+            t.start()
+
+        rows = {name: np.zeros(n_trees, dtype) for name, dtype in _TRACE_ARRAYS.items()}
+        forest, f = state.forest, state.f
+        for j in range(n_trees):
+            push = pushes.get()
+            if push is None:
+                raise RuntimeError("async worker failed") from errors[0]
+            i, pulled_version, w, tree, delta, t_build, t_pushed = push
+            t_fold0 = time.perf_counter()
+            forest, f = self._fold(forest, f, tree, delta)
+            jax.block_until_ready(f)
+            t_fold1 = time.perf_counter()
+            with lock:
+                shared["version"] = j + 1
+                shared["f"] = f
+            rows["schedule"][j] = pulled_version
+            rows["key_index"][j] = i
+            rows["worker"][j] = w
+            rows["t_build"][j] = t_build
+            rows["t_queue"][j] = t_fold0 - t_pushed
+            rows["t_fold"][j] = t_fold1 - t_fold0
+        makespan = time.perf_counter() - t_start
+        for t in threads:
+            t.join()
+
+        trace = RunTrace(
+            n_workers=self.n_workers, seed=seed, makespan=makespan, **rows
+        )
+        # The realized schedule must be a valid causal k(j) and the tickets
+        # a permutation — the replay contract's preconditions.
+        resolve_schedule(trace.schedule, n_trees)
+        assert sorted(trace.key_index) == list(range(n_trees))
+        final = TrainState(
+            forest=forest, f=f, step=jnp.asarray(n_trees, jnp.int32)
+        )
+        return final, trace
+
+    # -------------------------------------------------------------- replay
+    def replay(self, trace: RunTrace) -> tuple[TrainState, jax.Array]:
+        """Re-execute a recorded run deterministically (fused scan form)."""
+        return replay_trace(self.cfg, self.data, trace, trainer=self.trainer)
+
+
+def replay_trace(
+    cfg: SGBDTConfig,
+    data: BinnedData,
+    trace: RunTrace,
+    *,
+    trainer: Trainer | None = None,
+) -> tuple[TrainState, jax.Array]:
+    """Replay a ``RunTrace`` through ``Trainer.scan_with``.
+
+    Feeds the realized k(j) and the ticket-permuted per-round keys back
+    through the deterministic engine; the returned forest is bit-identical
+    to the threaded run that recorded the trace.
+    """
+    if trace.n_trees != cfg.n_trees:
+        raise ValueError(
+            f"trace has {trace.n_trees} rounds but cfg.n_trees={cfg.n_trees}"
+        )
+    if trainer is None:
+        trainer = Trainer(cfg)
+    keys = jax.random.split(jax.random.PRNGKey(trace.seed), cfg.n_trees)
+    rngs = keys[np.asarray(trace.key_index)]
+    schedule = resolve_schedule(trace.schedule, cfg.n_trees)
+    return trainer.scan_with(
+        data, jnp.asarray(schedule), rngs, trace.ring_size
+    )

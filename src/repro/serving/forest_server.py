@@ -39,6 +39,11 @@ from repro.trees.forest import Forest
 _FOREST_FIELDS = ("feature", "threshold", "leaf_value", "n_trees", "base_score")
 
 
+def _nonfinite_rows(x: np.ndarray) -> np.ndarray:
+    """Indices of rows containing any NaN/±inf feature."""
+    return np.flatnonzero(~np.isfinite(x).all(axis=1))
+
+
 def load_forest_checkpoint(
     root: str | pathlib.Path, step: int, like: Forest | None = None
 ) -> Forest:
@@ -51,7 +56,7 @@ def load_forest_checkpoint(
     shapes are validated against the serving template (capacity and depth
     are static for the jit cache).
     """
-    d = pathlib.Path(root) / f"step_{step:06d}"
+    d = checkpoint.step_dir(root, step)
     manifest = json.loads((d / "manifest.json").read_text())
     found: dict[str, np.ndarray] = {}
     for entry in manifest["leaves"]:
@@ -91,6 +96,12 @@ class PredictResult:
     scores: np.ndarray  # (n,) raw margins — or (n, K) linked predictions
     model_step: int  # checkpoint step that served this request
     latency_s: float  # wall time of the wave this request rode
+    # Row indices (within the request) that contained NaN/±inf features;
+    # empty when the request was clean. Only populated in 'flag' mode —
+    # 'reject' mode never admits such a request.
+    nonfinite_rows: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64)
+    )
 
 
 class ForestServer:
@@ -106,6 +117,13 @@ class ForestServer:
     outputs are probabilities/scores with exactly the training-time
     semantics (e.g. (rows, K) softmax rows for ``"multiclass:K"``).
     Without it, raw F(x) margins are served (the historical contract).
+
+    Non-finite requests (``on_nonfinite``): training never sees NaN/±inf,
+    so at serve time they are malformed input, not data. ``"reject"``
+    (default) refuses the request in ``submit``; ``"flag"`` serves it —
+    ``apply_bins`` clamps ±inf and routes NaN to its deterministic NaN bin
+    — and reports the offending row indices in
+    ``PredictResult.nonfinite_rows`` so the caller can discount them.
     """
 
     def __init__(
@@ -118,12 +136,18 @@ class ForestServer:
         backend: str = "auto",
         model_step: int = -1,
         objective: Objective | str | None = None,
+        on_nonfinite: str = "reject",
     ):
+        if on_nonfinite not in ("reject", "flag"):
+            raise ValueError(
+                f"on_nonfinite must be 'reject' or 'flag', got {on_nonfinite!r}"
+            )
         self.forest = forest
         self.bin_edges = jnp.asarray(bin_edges, jnp.float32)
         self.ckpt_root = ckpt_root
         self.max_rows = max_rows
         self.model_step = model_step
+        self.on_nonfinite = on_nonfinite
         self.waves_served = 0
         self.objective = get_objective(objective) if objective is not None else None
         depth = forest.depth
@@ -161,6 +185,13 @@ class ForestServer:
                 f"request {req.uid}: {x.shape[0]} rows exceeds "
                 f"max_rows={self.max_rows}"
             )
+        bad = _nonfinite_rows(x)
+        if bad.size and self.on_nonfinite == "reject":
+            raise ValueError(
+                f"request {req.uid}: non-finite features in rows "
+                f"{bad.tolist()} (server runs on_nonfinite='reject'; "
+                f"use 'flag' to serve them with clamped/NaN-routed bins)"
+            )
         self._queue.append(req)
 
     # ------------------------------------------------------------------ waves
@@ -190,6 +221,10 @@ class ForestServer:
                     scores=scores[off : off + n],
                     model_step=self.model_step,
                     latency_s=dt,
+                    # Recomputed per request at serve time (cheap: <=
+                    # max_rows rows) — no uid-keyed bookkeeping to go
+                    # stale on duplicate uids or abandoned queue entries.
+                    nonfinite_rows=_nonfinite_rows(np.asarray(req.x, np.float32)),
                 )
             )
             off += n

@@ -58,12 +58,24 @@ def make_bins(x: np.ndarray, n_bins: int = 256) -> np.ndarray:
     return np.ascontiguousarray(edges)
 
 
-@functools.partial(jax.jit, static_argnames=())
-def apply_bins(x: jax.Array, bin_edges: jax.Array) -> jax.Array:
-    """Map raw features (N, F) onto bin ids (N, F) int32 via searchsorted."""
+@functools.partial(jax.jit, static_argnames=("nan_bin",))
+def apply_bins(x: jax.Array, bin_edges: jax.Array, nan_bin: int = 0) -> jax.Array:
+    """Map raw features (N, F) onto bin ids (N, F) int32 via searchsorted.
+
+    Finite-values policy (serving sees raw, possibly malformed floats):
+      * ``-inf`` clamps to bin 0, ``+inf`` clamps to the last bin — the
+        values really are below/above every edge;
+      * ``NaN`` routes deterministically to ``nan_bin`` (default 0).
+        ``searchsorted`` on NaN is comparison-order-defined and lands in
+        the LAST bin, which silently reads as "very large feature" — a
+        malformed request must not get a confident extreme-bin prediction.
+    """
 
     def one_feature(col: jax.Array, edges: jax.Array) -> jax.Array:
-        return jnp.searchsorted(edges, col, side="left").astype(jnp.int32)
+        # searchsorted already clamps ±inf (below/above every finite edge
+        # -> bin 0 / last bin); only NaN needs explicit routing.
+        ids = jnp.searchsorted(edges, col, side="left").astype(jnp.int32)
+        return jnp.where(jnp.isnan(col), jnp.int32(nan_bin), ids)
 
     return jax.vmap(one_feature, in_axes=(1, 0), out_axes=1)(x, bin_edges)
 

@@ -93,3 +93,35 @@ def test_atomic_overwrite(tmp_path):
     save_pytree(tmp_path, 3, {"w": jnp.ones(2)})
     back = restore_pytree(tmp_path, 3, {"w": jnp.zeros(2)})
     np.testing.assert_array_equal(np.asarray(back["w"]), 1.0)
+
+
+def test_foreign_step_entries_tolerated(tmp_path):
+    """A checkpoint root containing foreign step_* entries (step_final/, a
+    stray file, an unpadded numeric name) must not crash latest_step, the
+    serving hot-swap poll, or CheckpointManager GC."""
+    from repro.checkpoint import latest_step
+
+    tree = {"w": np.arange(4, dtype=np.float32)}
+    mgr = CheckpointManager(tmp_path, save_every=1, keep=2)
+    for step in (1, 2, 3):
+        mgr.maybe_save(step, tree)
+    # foreign entries: non-numeric dir, stray file, unpadded numeric dir
+    (tmp_path / "step_final").mkdir()
+    (tmp_path / "step_final" / "manifest.json").write_text("{}")
+    (tmp_path / "step_notes.txt").write_text("scratch")
+    save_pytree(tmp_path, 7, tree)
+    (tmp_path / "step_000007").rename(tmp_path / "step_7")
+
+    assert latest_step(tmp_path) == 7  # unpadded numeric entries count
+    # and the loaders can open what latest_step reports: restore_latest
+    # resolves the unpadded dir instead of crashing the hot-swap poll
+    step, restored = mgr.restore_latest(tree)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(restored["w"]), tree["w"])
+    mgr.maybe_save(8, tree)  # triggers _gc over the polluted root
+    kept = sorted(p.name for p in tmp_path.iterdir() if p.name.startswith("step_"))
+    # keep=2 newest numeric steps survive; foreign entries are untouched
+    assert "step_final" in kept and "step_notes.txt" in kept
+    numeric = [n for n in kept if n[5:].isdigit()]
+    assert numeric == ["step_000008", "step_7"]
+    assert latest_step(tmp_path) == 8

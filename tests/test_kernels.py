@@ -375,3 +375,33 @@ def test_apply_forest_matches_tree_sum(key):
         np.asarray(forest.base_score + total),
         rtol=1e-5, atol=1e-5,
     )
+
+
+def test_kernel_interpret_default_autodetects(key):
+    """Regression: raw kernel entry points default interpret=None, resolved
+    from the backend (interpret off TPU, Mosaic on it) — a direct caller no
+    longer silently runs the interpreter on real hardware. On this CPU the
+    auto mode must equal an explicit interpret=True run."""
+    import inspect
+
+    from repro.kernels.flash_attention import (
+        flash_attention_bwd_pallas,
+        flash_attention_pallas,
+    )
+    from repro.kernels.forest_traversal import forest_traverse_pallas
+    from repro.kernels.split_scan import split_gain_pallas
+
+    for fn in (
+        histogram_pallas,
+        split_gain_pallas,
+        forest_traverse_pallas,
+        flash_attention_pallas,
+        flash_attention_bwd_pallas,
+    ):
+        sig = inspect.signature(fn.__wrapped__)
+        assert sig.parameters["interpret"].default is None, fn
+
+    bins, node, grad, hess = _rand_case(key, 512, 8, 16, 4)
+    auto = histogram_pallas(bins, node, grad, hess, 4, 16)
+    explicit = histogram_pallas(bins, node, grad, hess, 4, 16, interpret=True)
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(explicit))

@@ -225,3 +225,35 @@ def test_sharded_tree_build_matches_single_device(shard_results):
     assert shard_results["tree_feature_equal"], shard_results
     assert shard_results["tree_threshold_equal"], shard_results
     assert shard_results["leaf_max_diff"] < 1e-5, shard_results
+
+
+# ------------------------------------------------------------ trainer cache
+def test_trainer_cache_lru_bounded():
+    """get_trainer must not leak one Trainer (plus its jit caches) per
+    config forever across sweeps; the cache is LRU-bounded and clearable."""
+    from repro.ps import clear_trainers, get_trainer
+    from repro.ps.engine import _TRAINERS, _TRAINERS_MAX
+
+    clear_trainers()
+    cfgs = [
+        SGBDTConfig(
+            n_trees=5 + i, step_length=0.1, sampling_rate=0.8,
+            learner=LearnerConfig(depth=2, n_bins=16),
+        )
+        for i in range(_TRAINERS_MAX + 4)
+    ]
+    trainers = [get_trainer(c) for c in cfgs]
+    assert len(_TRAINERS) == _TRAINERS_MAX
+    # most-recent configs hit the same instance; the oldest were evicted
+    assert get_trainer(cfgs[-1]) is trainers[-1]
+    assert get_trainer(cfgs[0]) is not trainers[0]
+    # LRU recency: re-touching an entry protects it from the next eviction
+    get_trainer(cfgs[-2])
+    extra = SGBDTConfig(
+        n_trees=99, step_length=0.1, sampling_rate=0.8,
+        learner=LearnerConfig(depth=2, n_bins=16),
+    )
+    get_trainer(extra)
+    assert cfgs[-2] in _TRAINERS
+    clear_trainers()
+    assert len(_TRAINERS) == 0

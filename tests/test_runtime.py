@@ -1,0 +1,156 @@
+"""The real host-async PS runtime: record-and-replay, stragglers, traces.
+
+The contracts under test:
+  * record-and-replay — a threaded W=4 run's realized (k(j), ticket) trace,
+    replayed through ``Trainer.scan_with``, reproduces the identical forest
+    bit for bit (the runtime's debuggability story);
+  * the realized schedule is a valid causal k(j) and the tickets are a
+    permutation of the rounds;
+  * straggler injection — a slow worker's pushes are measurably more stale,
+    and training still converges;
+  * trace JSON round-trips, and the simulator cross-validation helpers
+    compare realized vs. predicted staleness for the measured geometry.
+"""
+import numpy as np
+import pytest
+
+from repro.core.sgbdt import SGBDTConfig, init_state, train_loss
+from repro.core.simulator import crossvalidate_schedule, staleness_stats
+from repro.ps import AsyncRuntime, RunTrace, replay_trace, resolve_schedule
+from repro.trees.learner import LearnerConfig
+
+
+@pytest.fixture(scope="module")
+def rt_cfg():
+    return SGBDTConfig(
+        n_trees=24, step_length=0.3, sampling_rate=0.8,
+        learner=LearnerConfig(depth=4, n_bins=64),
+    )
+
+
+def _forest_identical(a, b) -> bool:
+    return (
+        np.array_equal(np.asarray(a.forest.feature), np.asarray(b.forest.feature))
+        and np.array_equal(
+            np.asarray(a.forest.threshold), np.asarray(b.forest.threshold)
+        )
+        and np.array_equal(
+            np.asarray(a.forest.leaf_value), np.asarray(b.forest.leaf_value)
+        )
+        and np.array_equal(np.asarray(a.f), np.asarray(b.f))
+    )
+
+
+@pytest.fixture(scope="module")
+def threaded_run(rt_cfg, sparse_data):
+    rt = AsyncRuntime(rt_cfg, sparse_data, n_workers=4)
+    state, trace = rt.run(seed=0)
+    return rt, state, trace
+
+
+def test_record_and_replay_identical_forest(rt_cfg, sparse_data, threaded_run):
+    """THE runtime contract: the nondeterministic threaded interleaving,
+    replayed from its trace through the deterministic fused-scan engine,
+    rebuilds the same model exactly."""
+    rt, state, trace = threaded_run
+    st_replay, losses = rt.replay(trace)
+    assert _forest_identical(state, st_replay)
+    assert losses.shape == (rt_cfg.n_trees,)
+    # and through the module-level entry point (fresh Trainer, same result)
+    st_again, _ = replay_trace(rt_cfg, sparse_data, trace)
+    assert _forest_identical(state, st_again)
+
+
+def test_trace_is_valid_schedule(rt_cfg, threaded_run):
+    _, _, trace = threaded_run
+    # causal, non-negative, right length — resolve_schedule enforces all
+    resolve_schedule(trace.schedule, rt_cfg.n_trees)
+    assert sorted(trace.key_index.tolist()) == list(range(rt_cfg.n_trees))
+    assert set(trace.worker.tolist()) <= set(range(4))
+    assert trace.makespan > 0
+    assert (trace.t_build > 0).all()
+    hist = trace.staleness_histogram()
+    assert sum(hist.values()) == rt_cfg.n_trees
+
+
+def test_trace_json_roundtrip(tmp_path, threaded_run):
+    _, _, trace = threaded_run
+    path = trace.save(tmp_path / "trace.json")
+    back = RunTrace.load(path)
+    assert back.n_workers == trace.n_workers and back.seed == trace.seed
+    np.testing.assert_array_equal(back.schedule, trace.schedule)
+    np.testing.assert_array_equal(back.key_index, trace.key_index)
+    np.testing.assert_array_equal(back.worker, trace.worker)
+    np.testing.assert_allclose(back.t_build, trace.t_build)
+    assert back.makespan == pytest.approx(trace.makespan)
+
+
+def test_replayed_loaded_trace_matches(rt_cfg, sparse_data, threaded_run, tmp_path):
+    """Replay survives serialization: a trace loaded from disk still
+    reproduces the threaded forest."""
+    _, state, trace = threaded_run
+    back = RunTrace.load(trace.save(tmp_path / "t.json"))
+    st_replay, _ = replay_trace(rt_cfg, sparse_data, back)
+    assert _forest_identical(state, st_replay)
+
+
+def test_straggler_shifts_staleness(rt_cfg, sparse_data):
+    """One slow worker: its pushes are built from older versions than the
+    fast workers' (it holds each snapshot longer), and bounded staleness
+    still converges — the paper's validity claim under heterogeneity."""
+    rt = AsyncRuntime(rt_cfg, sparse_data, n_workers=4, worker_delay={0: 0.25})
+    state, trace = rt.run(seed=0)
+    stale = trace.staleness
+    from_straggler = trace.worker == 0
+    assert from_straggler.any(), "straggler never pushed"
+    assert from_straggler.sum() < (~from_straggler).sum()
+    assert stale[from_straggler].mean() > stale[~from_straggler].mean()
+    # still trains: loss strictly improves on the init state
+    l0 = float(train_loss(rt_cfg, sparse_data, init_state(rt_cfg, sparse_data)))
+    l1 = float(train_loss(rt_cfg, sparse_data, state))
+    assert l1 < 0.9 * l0
+
+
+def test_crossvalidation_helpers(threaded_run):
+    _, _, trace = threaded_run
+    stats = staleness_stats(trace.schedule)
+    assert stats["mean_staleness"] == pytest.approx(float(trace.staleness.mean()))
+    assert sum(stats["histogram"].values()) == trace.n_trees
+    xval = crossvalidate_schedule(
+        trace.schedule, trace.cluster_spec(), makespan=trace.makespan
+    )
+    assert xval["realized"]["mean_staleness"] == stats["mean_staleness"]
+    assert xval["simulated"]["max_staleness"] >= 0
+    assert xval["realized_makespan"] == pytest.approx(trace.makespan)
+    assert xval["makespan_ratio"] > 0
+
+
+def test_multioutput_replay():
+    """K-output rounds (stacked tree groups, one push each) ride the same
+    runtime + replay contract."""
+    import repro.data as D
+
+    data = D.make_multiclass_classification(300, 20, 3, seed=11)
+    cfg = SGBDTConfig(
+        n_trees=10, step_length=0.2, sampling_rate=0.9,
+        objective="multiclass:3",
+        learner=LearnerConfig(depth=3, n_bins=64),
+    )
+    rt = AsyncRuntime(cfg, data, n_workers=3)
+    state, trace = rt.run(seed=1)
+    st_replay, _ = rt.replay(trace)
+    assert _forest_identical(state, st_replay)
+    assert int(state.forest.n_trees) == 30  # 10 rounds x 3 outputs
+
+
+def test_runtime_rejects_bad_args(rt_cfg, sparse_data):
+    with pytest.raises(ValueError):
+        AsyncRuntime(rt_cfg, sparse_data, n_workers=0)
+    rt = AsyncRuntime(rt_cfg, sparse_data, n_workers=2)
+    _, trace = rt.run(seed=0)
+    wrong = SGBDTConfig(
+        n_trees=rt_cfg.n_trees + 1, step_length=0.3, sampling_rate=0.8,
+        learner=LearnerConfig(depth=4, n_bins=64),
+    )
+    with pytest.raises(ValueError):
+        replay_trace(wrong, sparse_data, trace)

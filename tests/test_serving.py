@@ -231,3 +231,47 @@ def test_load_forest_checkpoint_bare_forest(gbdt_setup, tmp_path):
         np.asarray(forest.leaf_value), np.asarray(state.forest.leaf_value)
     )
     assert int(forest.n_trees) == int(state.forest.n_trees)
+
+
+def test_nonfinite_request_rejected_by_default(gbdt_setup):
+    """Serve-time NaN regression: a malformed row must not silently bin
+    into the top bin and return a confident garbage score — the default
+    server refuses it at submit."""
+    x, data, state, _ = gbdt_setup
+    server = ForestServer(state.forest, data.bin_edges, max_rows=32)
+    bad = x[:4].copy()
+    bad[1, 3] = np.nan
+    bad[2, 0] = np.inf
+    with pytest.raises(ValueError, match="non-finite"):
+        server.submit(PredictRequest(uid=0, x=bad))
+    assert not server._queue  # nothing half-admitted
+    with pytest.raises(ValueError):
+        ForestServer(state.forest, data.bin_edges, on_nonfinite="drop")
+
+
+def test_nonfinite_request_flag_mode(gbdt_setup):
+    """'flag' mode serves the request deterministically (NaN routed to the
+    NaN bin, ±inf clamped) and reports the offending rows; clean rows keep
+    their exact clean-request scores."""
+    x, data, state, _ = gbdt_setup
+    server = ForestServer(
+        state.forest, data.bin_edges, max_rows=32, on_nonfinite="flag"
+    )
+    bad = x[:8].copy()
+    bad[1, 3] = np.nan
+    bad[5, 0] = -np.inf
+    out = server.run([PredictRequest(uid=0, x=bad)])[0]
+    assert out.nonfinite_rows.tolist() == [1, 5]
+    clean = server.run([PredictRequest(uid=1, x=x[:8])])[0]
+    assert clean.nonfinite_rows.size == 0
+    good = np.setdiff1d(np.arange(8), [1, 5])
+    np.testing.assert_array_equal(out.scores[good], clean.scores[good])
+    # the flagged rows still get finite (deterministic) scores
+    assert np.isfinite(out.scores).all()
+    # NaN-in-top-bin regression: the NaN row's score equals the score of
+    # the same row with that feature forced to the NaN bin's range (very
+    # small), NOT the score with the feature forced huge.
+    forced_small = x[:8].copy()
+    forced_small[1, 3] = -1e30
+    small = server.run([PredictRequest(uid=2, x=forced_small)])[0]
+    np.testing.assert_array_equal(out.scores[1], small.scores[1])

@@ -17,6 +17,30 @@ from repro.trees import (
 from repro.trees.tree import apply_tree, leaf_indices
 
 
+def test_binning_nonfinite_policy(rng):
+    """Serve-time regression: NaN must NOT silently land in the top bin
+    (searchsorted's comparison-order artifact); ±inf clamp to the ends."""
+    x = rng.standard_normal((100, 3)).astype(np.float32)
+    edges = make_bins(x, n_bins=16)
+    bad = x.copy()
+    bad[0, 0] = np.nan
+    bad[1, 1] = np.inf
+    bad[2, 2] = -np.inf
+    bins = np.asarray(apply_bins(jnp.asarray(bad), jnp.asarray(edges)))
+    assert bins[0, 0] == 0  # NaN routes to the designated bin, not bin 15
+    assert bins[1, 1] == 15  # +inf really is above every edge
+    assert bins[2, 2] == 0  # -inf really is below every edge
+    # a non-default NaN bin routes there instead
+    bins7 = np.asarray(
+        apply_bins(jnp.asarray(bad), jnp.asarray(edges), nan_bin=7)
+    )
+    assert bins7[0, 0] == 7
+    # finite entries are untouched by the policy
+    clean = np.asarray(apply_bins(jnp.asarray(x), jnp.asarray(edges)))
+    mask = np.isfinite(bad)
+    np.testing.assert_array_equal(bins[mask], clean[mask])
+
+
 def test_binning_monotone_and_bounded(rng):
     x = rng.standard_normal((500, 7)).astype(np.float32)
     edges = make_bins(x, n_bins=16)
