@@ -25,10 +25,19 @@ class PaperExperiment:
     paper_section: str
 
 
-def _cfg(n_trees: int, depth: int, rate: float, v: float, loss: str) -> SGBDTConfig:
+def _cfg(
+    n_trees: int, depth: int, rate: float, v: float, loss: str,
+    hist_mode: str = "subtract",
+) -> SGBDTConfig:
+    # ``hist_mode`` threads the histogram-subtraction builder through the
+    # paper experiments; "subtract" is the production default (≈ half the
+    # histogram kernel work per tree), "rebuild" reproduces the historical
+    # full-level builds bitwise (see trees.learner).
     return SGBDTConfig(
         n_trees=n_trees, step_length=v, sampling_rate=rate, loss=loss,
-        learner=LearnerConfig(depth=depth, n_bins=64, feature_fraction=0.8),
+        learner=LearnerConfig(
+            depth=depth, n_bins=64, feature_fraction=0.8, hist_mode=hist_mode
+        ),
     )
 
 

@@ -7,10 +7,18 @@ reformulate the whole level-histogram as a single dense contraction:
 
     out[r, f*B + b] = sum_s GH[r, s] * onehot[s, f*B + b]
 
-where row r = 2*node + (0: grad, 1: hess), GH masks each sample's grad/hess
-onto its current tree node, and onehot marks the sample's bin for feature f.
-Both factor matrices are built on the fly inside VMEM from integer inputs —
-nothing of size (N, F*B) ever touches HBM.
+where row r carries (node_of_row[r], grad-or-hess), GH masks each sample's
+grad/hess onto its current tree node, and onehot marks the sample's bin for
+feature f. Both factor matrices are built on the fly inside VMEM from
+integer inputs — nothing of size (N, F*B) ever touches HBM.
+
+The row -> node mapping is an explicit operand (``row_map``), not an iota:
+row r selects samples on node ``row_map[r]``. The full-level build passes
+``row_map = repeat(arange(n_nodes), 2)``; the histogram-subtraction tree
+builder (``trees.learner`` with ``hist_mode='subtract'``) passes the
+smaller child of every parent only, halving the GH rows — and therefore
+the MXU work — of every level below the root. Kernel cost is linear in
+``rows``, so the node subset IS the speedup.
 
 Grid: (feature_blocks, sample_blocks); sample axis is innermost and
 accumulates into the same output block (standard Pallas reduce pattern).
@@ -29,13 +37,13 @@ def _hist_kernel(
     node_ref,  # (S_blk, 1) int32, -1 = inactive
     grad_ref,  # (S_blk, 1) f32
     hess_ref,  # (S_blk, 1) f32
-    out_ref,  # (2*L, F_blk*B) f32
+    rowmap_ref,  # (rows, 1) int32 — node id each GH row selects
+    out_ref,  # (rows, F_blk*B) f32
     *,
-    n_nodes: int,
     n_bins: int,
 ):
     s_blk, f_blk = bins_ref.shape
-    rows = 2 * n_nodes
+    rows = out_ref.shape[0]
 
     sample_axis = pl.program_id(1)
 
@@ -46,13 +54,14 @@ def _hist_kernel(
     node = node_ref[:, 0]  # (S,)
     grad = grad_ref[:, 0]
     hess = hess_ref[:, 0]
+    row_node = rowmap_ref[:, 0]  # (rows,)
 
-    # GH: (2L, S). Row r selects samples on node r//2; even rows carry grad,
-    # odd rows carry hess. Inactive samples (node < 0) never match.
-    row_node = jax.lax.broadcasted_iota(jnp.int32, (rows, s_blk), 0) // 2
+    # GH: (rows, S). Row r selects samples on node row_map[r]; even rows
+    # carry grad, odd rows carry hess. Inactive samples (node < 0) never
+    # match (row maps hold real node ids >= 0).
     row_is_h = jax.lax.broadcasted_iota(jnp.int32, (rows, s_blk), 0) % 2
     gh_val = jnp.where(row_is_h == 0, grad[None, :], hess[None, :])
-    gh = jnp.where(row_node == node[None, :], gh_val, 0.0)
+    gh = jnp.where(row_node[:, None] == node[None, :], gh_val, 0.0)
 
     # One-hot: (S, F_blk*B), onehot[s, f*B + b] = 1{bins[s, f] == b}.
     bin_iota = jax.lax.broadcasted_iota(jnp.int32, (s_blk, f_blk, n_bins), 2)
@@ -78,8 +87,15 @@ def histogram_pallas(
     sample_block: int = 512,
     feature_block: int = 8,
     interpret: bool | None = None,
+    active_nodes: jax.Array | None = None,  # (n_sub,) int32 node subset
 ) -> jax.Array:
-    """Returns (2, n_nodes, F, n_bins) f32 histograms. See module docstring.
+    """Returns (2, R, F, n_bins) f32 histograms. See module docstring.
+
+    ``R = n_nodes`` for the full-level build (``active_nodes=None``), else
+    ``R = len(active_nodes)`` and row r histograms node ``active_nodes[r]``
+    only — the entry point of the parent-minus-child subtraction builder.
+    ``active_nodes`` values must be valid node ids in ``[0, n_nodes)``;
+    its length is static (it fixes the kernel's row count).
 
     ``interpret=None`` auto-detects: compile to Mosaic on TPU, run the
     Pallas interpreter elsewhere — so direct callers (tests, benches) get
@@ -91,16 +107,21 @@ def histogram_pallas(
     assert n % sample_block == 0, "wrapper must pad samples"
     assert f % feature_block == 0, "wrapper must pad features"
     ns, nf = n // sample_block, f // feature_block
-    rows = 2 * n_nodes
+    if active_nodes is None:
+        active_nodes = jnp.arange(n_nodes, dtype=jnp.int32)
+    n_sub = active_nodes.shape[0]
+    rows = 2 * n_sub
+    row_map = jnp.repeat(active_nodes.astype(jnp.int32), 2)  # (rows,)
 
     out = pl.pallas_call(
-        functools.partial(_hist_kernel, n_nodes=n_nodes, n_bins=n_bins),
+        functools.partial(_hist_kernel, n_bins=n_bins),
         grid=(nf, ns),
         in_specs=[
             pl.BlockSpec((sample_block, feature_block), lambda fb, sb: (sb, fb)),
             pl.BlockSpec((sample_block, 1), lambda fb, sb: (sb, 0)),
             pl.BlockSpec((sample_block, 1), lambda fb, sb: (sb, 0)),
             pl.BlockSpec((sample_block, 1), lambda fb, sb: (sb, 0)),
+            pl.BlockSpec((rows, 1), lambda fb, sb: (0, 0)),
         ],
         out_specs=pl.BlockSpec(
             (rows, feature_block * n_bins), lambda fb, sb: (0, fb)
@@ -112,6 +133,7 @@ def histogram_pallas(
         node_ids[:, None],
         grad[:, None],
         hess[:, None],
+        row_map[:, None],
     )
-    # rows are (2*node + grad/hess) -> (node, gh, feature, bin) -> (gh, node, f, b)
-    return out.reshape(n_nodes, 2, f, n_bins).transpose(1, 0, 2, 3)
+    # rows are (2*row + grad/hess) -> (row, gh, feature, bin) -> (gh, row, f, b)
+    return out.reshape(n_sub, 2, f, n_bins).transpose(1, 0, 2, 3)

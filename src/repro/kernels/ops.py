@@ -74,6 +74,60 @@ def build_histogram(
     return out
 
 
+def build_histogram_subset(
+    bins: jax.Array,
+    node_ids: jax.Array,
+    grad: jax.Array,
+    hess: jax.Array,
+    active_nodes: jax.Array,  # (n_sub,) int32 node ids to build
+    n_nodes: int,
+    n_bins: int,
+    backend: str = "auto",
+    sample_block: int = 512,
+    feature_block: int = 8,
+    axis_name: str | None = None,
+) -> jax.Array:
+    """(2, n_sub, F, n_bins) histograms for the ``active_nodes`` subset only.
+
+    The histogram-subtraction builder's entry point: at each level it
+    histograms one child per parent and derives the sibling as
+    ``parent - built``. Kernel work is linear in the GH row count
+    (2 * n_sub vs 2 * n_nodes), so building half the nodes halves the MXU
+    contraction per level.
+
+    ``axis_name``: as in ``build_histogram`` — per-shard subset histograms
+    merge with a psum across the data axis. The SUBTRACTION does not live
+    here: it commutes with the psum (both are linear), and the learner
+    subtracts after the collective so every shard derives the sibling from
+    identical merged values and stays in lockstep.
+    """
+    if backend == "auto":
+        backend = _default_backend()
+    active_nodes = active_nodes.astype(jnp.int32)
+    if backend == "ref":
+        out = _ref.histogram_subset_ref(
+            bins, node_ids, grad, hess, active_nodes, n_nodes, n_bins
+        )
+    elif backend == "pallas":
+        interpret = jax.default_backend() != "tpu"
+        n_feat = bins.shape[1]
+        fb = min(feature_block, n_feat)
+        binsp = _pad_to(_pad_to(bins, sample_block, 0, 0), fb, 1, 0)
+        nodep = _pad_to(node_ids, sample_block, 0, -1)  # padded samples inactive
+        gradp = _pad_to(grad, sample_block, 0, 0.0)
+        hessp = _pad_to(hess, sample_block, 0, 0.0)
+        out = histogram_pallas(
+            binsp, nodep, gradp, hessp, n_nodes, n_bins,
+            sample_block=sample_block, feature_block=fb, interpret=interpret,
+            active_nodes=active_nodes,
+        )[:, :, :n_feat, :]
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    if axis_name is not None:
+        out = jax.lax.psum(out, axis_name)
+    return out
+
+
 def split_gain(
     hist: jax.Array,
     lam,

@@ -41,6 +41,42 @@ def histogram_ref(
     return out.astype(jnp.float32)
 
 
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins"))
+def histogram_subset_ref(
+    bins: jax.Array,  # (N, F) int32 bin ids
+    node_ids: jax.Array,  # (N,) int32 current node per sample, -1 = inactive
+    grad: jax.Array,  # (N,) f32 weighted gradient
+    hess: jax.Array,  # (N,) f32 weighted hessian / count weight
+    active_nodes: jax.Array,  # (n_sub,) int32 — node ids to histogram
+    n_nodes: int,  # static bound on node ids (inverse-map size)
+    n_bins: int,
+) -> jax.Array:
+    """Node-subset histograms: out[0|1, r, f, b] sums samples on node
+    ``active_nodes[r]`` only — the oracle for the subtraction builder's
+    smaller-child build (``trees.learner`` ``hist_mode='subtract'``).
+
+    Samples whose node is not in ``active_nodes`` (or is -1) contribute
+    nothing; each active row is bit-identical to the matching row of
+    ``histogram_ref`` (same scatter order over the same samples).
+    """
+    n, f = bins.shape
+    n_sub = active_nodes.shape[0]
+    # Inverse map node id -> subset row (-1 = not built this level).
+    inv = jnp.full((n_nodes,), -1, jnp.int32)
+    inv = inv.at[active_nodes].set(jnp.arange(n_sub, dtype=jnp.int32))
+    row = jnp.where(node_ids >= 0, inv[jnp.clip(node_ids, 0, n_nodes - 1)], -1)
+    active = row >= 0
+    rowc = jnp.where(active, row, 0)
+    seg = (rowc[:, None] * f + jnp.arange(f)[None, :]) * n_bins + bins
+    gmat = jnp.where(active, grad, 0.0)[:, None] * jnp.ones((1, f), grad.dtype)
+    hmat = jnp.where(active, hess, 0.0)[:, None] * jnp.ones((1, f), hess.dtype)
+    num = n_sub * f * n_bins
+    hg = jax.ops.segment_sum(gmat.reshape(-1), seg.reshape(-1), num_segments=num)
+    hh = jax.ops.segment_sum(hmat.reshape(-1), seg.reshape(-1), num_segments=num)
+    out = jnp.stack([hg, hh]).reshape(2, n_sub, f, n_bins)
+    return out.astype(jnp.float32)
+
+
 @jax.jit
 def split_scan_ref(
     hist: jax.Array,  # (2, L, F, B) f32 grad/hess histograms

@@ -102,7 +102,9 @@ def run_gbdt(args) -> None:
         step_length=0.15,
         sampling_rate=args.sample or 0.8,
         objective=args.objective,
-        learner=LearnerConfig(depth=6, n_bins=64, feature_fraction=0.8),
+        learner=LearnerConfig(
+            depth=6, n_bins=64, feature_fraction=0.8, hist_mode=args.hist_mode
+        ),
     )
     if args.runtime == "threads":
         return run_gbdt_threads(args, cfg, data, obj)
@@ -208,6 +210,12 @@ def main() -> None:
                     help="replay the recorded trace through the "
                          "deterministic engine and assert the forests are "
                          "bit-identical (--runtime threads)")
+    ap.add_argument("--hist-mode", choices=("subtract", "rebuild"),
+                    default="subtract", dest="hist_mode",
+                    help="GBDT level-histogram strategy: 'subtract' derives "
+                         "each split's sibling from the cached parent "
+                         "histogram (~half the kernel work); 'rebuild' "
+                         "re-histograms every node (exact reference mode)")
     ap.add_argument("--objective", default="logistic",
                     help="GBDT objective registry spec: logistic | mse | "
                          "quantile[:a] | huber | multiclass:K | lambdarank")

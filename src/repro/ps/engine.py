@@ -25,6 +25,14 @@ local samples to the histogram kernel and the level histograms merge with
 a ``psum`` (see ``repro.ps.sharded``) — the block-distributed /
 DimBoost-style central-aggregation shape, but on ICI collectives instead
 of one server NIC.
+
+Determinism is PER HISTOGRAM MODE: ``LearnerConfig.hist_mode`` selects the
+worker's level-histogram strategy ('subtract' derives siblings from cached
+parents, 'rebuild' re-histograms every node; see ``trees.learner``). The
+mode rides inside ``cfg.learner`` through every execution form — threaded
+runtime, loop, fused scan replay — so the record-and-replay contract
+(DESIGN.md §11) stays bit-for-bit within a mode; the two modes agree with
+each other only to f32 subtraction tolerance.
 """
 from __future__ import annotations
 

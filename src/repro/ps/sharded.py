@@ -13,6 +13,14 @@ The ``psum`` hooks live inside the ordinary build path
 ``trees.learner.build_tree``); this module only wraps that path in
 ``shard_map`` with the right specs. Sample counts must divide the shard
 count (pad the dataset otherwise).
+
+Histogram-subtraction builds (``LearnerConfig.hist_mode='subtract'``)
+compose with the same specs: subtraction is linear, so it COMMUTES with
+the psum — the learner psums the per-shard smaller-child histograms (and
+the per-node sample counts that pick the child) first, then derives the
+sibling as ``merged_parent - merged_child`` AFTER the collective. Every
+shard therefore subtracts identical merged values and the replicated tree
+stays in lockstep; nothing in this module special-cases the mode.
 """
 from __future__ import annotations
 

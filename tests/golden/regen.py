@@ -1,0 +1,93 @@
+"""Regenerate the golden regression corpus under ``tests/golden/``.
+
+    PYTHONPATH=src python tests/golden/regen.py
+
+The corpus locks three contracts across future PRs (tests/test_golden.py):
+
+  * **checkpoint format** — ``ckpt/step_000008/`` is a ``TrainState``
+    checkpoint written by ``checkpoint.save_pytree``; it must stay
+    readable by both ``restore_pytree`` (CRC-checked) and the serving
+    loader ``load_forest_checkpoint``;
+  * **trace replay** — ``run_trace.json`` is a realized ``RunTrace`` from
+    a threaded ``AsyncRuntime`` run (W=3, ``hist_mode='subtract'`` — the
+    production default); replaying it through ``Trainer.scan_with`` must
+    keep reproducing the checkpointed forest;
+  * **serving outputs** — ``expected_scores.npy`` are the ``ForestServer``
+    predictions for ``eval_rows.npy`` (raw floats, served through
+    serve-time binning) under that forest.
+
+This module doubles as the single source of the golden configuration:
+``golden_config()`` / ``golden_data()`` / ``golden_eval_rows()`` are
+imported by the test so the fixture and its reader can never drift apart.
+The threaded RECORDING is nondeterministic (that is the point of the
+trace); everything derived from a committed trace is deterministic, which
+is why regeneration rewrites the whole corpus together.
+"""
+from __future__ import annotations
+
+import pathlib
+
+import numpy as np
+
+GOLDEN_DIR = pathlib.Path(__file__).resolve().parent
+GOLDEN_STEP = 8
+_N, _F = 320, 48
+
+
+def golden_config():
+    from repro.core.sgbdt import SGBDTConfig
+    from repro.trees.learner import LearnerConfig
+
+    return SGBDTConfig(
+        n_trees=GOLDEN_STEP, step_length=0.3, sampling_rate=0.8,
+        loss="logistic",
+        learner=LearnerConfig(depth=3, n_bins=64, hist_mode="subtract"),
+    )
+
+
+def golden_data():
+    import repro.data as D
+
+    return D.make_sparse_classification(_N, _F, 6, seed=17)
+
+
+def golden_eval_rows() -> np.ndarray:
+    """Raw (unbinned) float rows the serving contract is locked on."""
+    rng = np.random.default_rng(71)
+    rows = rng.lognormal(0.0, 1.0, size=(16, _F)).astype(np.float32)
+    rows[rng.random((16, _F)) < 0.8] = 0.0  # sparse, like the train set
+    return rows
+
+
+def main() -> None:
+    from repro import checkpoint
+    from repro.ps.runtime import AsyncRuntime
+    from repro.serving.forest_server import ForestServer, PredictRequest
+
+    cfg, data = golden_config(), golden_data()
+    rt = AsyncRuntime(cfg, data, n_workers=3)
+    state, trace = rt.run(seed=5)
+
+    replayed, _ = rt.replay(trace)
+    for name in ("feature", "threshold", "leaf_value"):
+        assert np.array_equal(
+            np.asarray(getattr(state.forest, name)),
+            np.asarray(getattr(replayed.forest, name)),
+        ), f"recorded run does not replay bitwise ({name}) — refusing to commit"
+
+    trace.save(GOLDEN_DIR / "run_trace.json")
+    checkpoint.save_pytree(GOLDEN_DIR / "ckpt", GOLDEN_STEP, state)
+
+    rows = golden_eval_rows()
+    server = ForestServer(state.forest, data.bin_edges, max_rows=32)
+    (result,) = server.run([PredictRequest(uid=0, x=rows)])
+    np.save(GOLDEN_DIR / "eval_rows.npy", rows)
+    np.save(GOLDEN_DIR / "expected_scores.npy", np.asarray(result.scores))
+
+    print(f"golden corpus regenerated under {GOLDEN_DIR}")
+    print(f"  staleness histogram {trace.staleness_histogram()}")
+    print(f"  expected_scores[:4] = {np.asarray(result.scores)[:4]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Golden regression corpus: checkpoint format, trace replay, serving.
+
+The fixtures under ``tests/golden/`` were written by ``regen.py`` (which
+is also imported here as the single source of the golden config/data, so
+the fixture and this reader cannot drift). They pin three cross-PR
+contracts:
+
+  * the on-disk checkpoint format stays readable — by the CRC-checked
+    pytree restore AND by the serving loader;
+  * a committed ``RunTrace`` keeps replaying to the committed forest
+    (ints exact; float leaves to 1e-6 — bitwise on the recording
+    container, tolerance covers jax-version drift in CI's `latest` lane);
+  * serving outputs for committed raw rows stay put.
+
+If a PR intentionally changes any of these contracts, rerun
+``PYTHONPATH=src python tests/golden/regen.py`` and commit the diff —
+the regeneration self-checks its own record/replay bitwise first.
+"""
+import importlib.util
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro import checkpoint
+from repro.core.sgbdt import init_state
+from repro.ps.runtime import RunTrace, replay_trace
+from repro.serving.forest_server import (
+    ForestServer,
+    PredictRequest,
+    load_forest_checkpoint,
+)
+
+GOLDEN = pathlib.Path(__file__).resolve().parent / "golden"
+
+_spec = importlib.util.spec_from_file_location("golden_regen", GOLDEN / "regen.py")
+regen = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(regen)
+
+
+@pytest.fixture(scope="module")
+def golden_cfg():
+    return regen.golden_config()
+
+
+@pytest.fixture(scope="module")
+def golden_data():
+    return regen.golden_data()
+
+
+@pytest.fixture(scope="module")
+def golden_forest(golden_cfg, golden_data):
+    """The committed forest, via the CRC-checked TrainState restore."""
+    like = init_state(golden_cfg, golden_data)
+    return checkpoint.restore_pytree(
+        GOLDEN / "ckpt", regen.GOLDEN_STEP, like, check_crc=True
+    ).forest
+
+
+def test_checkpoint_latest_step_and_manifest():
+    assert checkpoint.latest_step(GOLDEN / "ckpt") == regen.GOLDEN_STEP
+    manifest = json.loads(
+        (checkpoint.step_dir(GOLDEN / "ckpt", regen.GOLDEN_STEP)
+         / "manifest.json").read_text()
+    )
+    assert manifest["step"] == regen.GOLDEN_STEP
+    assert all("crc32" in leaf for leaf in manifest["leaves"])
+
+
+def test_checkpoint_readable_by_trainstate_restore(golden_forest):
+    assert int(golden_forest.n_trees) == regen.GOLDEN_STEP
+    assert golden_forest.depth == regen.golden_config().learner.depth
+    assert np.isfinite(np.asarray(golden_forest.leaf_value)).all()
+
+
+def test_checkpoint_readable_by_serving_loader(golden_forest):
+    """The serving loader must keep opening training checkpoints without a
+    training-set-sized template."""
+    served = load_forest_checkpoint(GOLDEN / "ckpt", regen.GOLDEN_STEP)
+    for name in ("feature", "threshold", "leaf_value", "n_trees", "base_score"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(served, name)),
+            np.asarray(getattr(golden_forest, name)),
+        )
+
+
+def test_trace_replays_to_committed_forest(golden_cfg, golden_data, golden_forest):
+    trace = RunTrace.load(GOLDEN / "run_trace.json")
+    assert trace.n_trees == golden_cfg.n_trees
+    state, losses = replay_trace(golden_cfg, golden_data, trace)
+    np.testing.assert_array_equal(
+        np.asarray(state.forest.feature), np.asarray(golden_forest.feature)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(state.forest.threshold), np.asarray(golden_forest.threshold)
+    )
+    np.testing.assert_allclose(
+        np.asarray(state.forest.leaf_value),
+        np.asarray(golden_forest.leaf_value),
+        rtol=0, atol=1e-6,
+    )
+    assert np.isfinite(np.asarray(losses)).all()
+
+
+def test_serving_outputs_locked(golden_data, golden_forest):
+    rows = np.load(GOLDEN / "eval_rows.npy")
+    expected = np.load(GOLDEN / "expected_scores.npy")
+    np.testing.assert_array_equal(rows, regen.golden_eval_rows())
+    server = ForestServer(golden_forest, golden_data.bin_edges, max_rows=32)
+    (result,) = server.run([PredictRequest(uid=0, x=rows)])
+    np.testing.assert_allclose(result.scores, expected, rtol=1e-5, atol=1e-5)

@@ -154,3 +154,34 @@ def test_runtime_rejects_bad_args(rt_cfg, sparse_data):
     )
     with pytest.raises(ValueError):
         replay_trace(wrong, sparse_data, trace)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("hist_mode", ["subtract", "rebuild"])
+def test_train_cli_threads_verify_replay(hist_mode, tmp_path):
+    """Subprocess smoke of the full CLI path: ``launch.train --runtime
+    threads --verify-replay`` must hold the bitwise replay contract under
+    BOTH histogram modes (the driver asserts it in-process and exits
+    nonzero on drift), and must export a loadable trace."""
+    import os
+    import pathlib
+    import subprocess
+    import sys
+
+    trace_path = tmp_path / f"trace_{hist_mode}.json"
+    src = pathlib.Path(__file__).resolve().parents[1] / "src"
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.train", "--arch", "gbdt",
+            "--runtime", "threads", "--steps", "6", "--workers", "2",
+            "--hist-mode", hist_mode, "--verify-replay",
+            "--trace-out", str(trace_path),
+        ],
+        capture_output=True, text=True, timeout=900,
+        env={**os.environ, "PYTHONPATH": str(src), "JAX_PLATFORMS": "cpu"},
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "record-and-replay identical forest: True" in proc.stdout
+    trace = RunTrace.load(trace_path)
+    assert trace.n_trees == 6
+    resolve_schedule(trace.schedule, 6)  # valid causal k(j)

@@ -1,0 +1,91 @@
+"""Edge cases of ``ps.schedules.resolve_schedule`` and its providers.
+
+The golden/replay work leans on schedule validation (every committed
+trace round-trips through ``resolve_schedule``), so the rejection paths
+are load-bearing: a malformed realized array must fail loudly here, not
+surface as a silent mis-replay.
+"""
+import numpy as np
+import pytest
+
+from repro.core.simulator import ClusterSpec
+from repro.ps.schedules import (
+    constant_delay,
+    max_staleness,
+    resolve_schedule,
+    worker_round_robin,
+)
+
+
+def test_realized_array_length_mismatch_rejected():
+    good = worker_round_robin(10, 3)
+    for bad_len in (9, 11, 0):
+        with pytest.raises(ValueError, match="schedule shape"):
+            resolve_schedule(good[:bad_len] if bad_len < 10 else
+                             np.concatenate([good, [9]]), 10)
+
+
+def test_realized_array_2d_rejected():
+    with pytest.raises(ValueError, match="schedule shape"):
+        resolve_schedule(np.zeros((5, 2), np.int32), 10)
+
+
+def test_causality_violation_rejected():
+    sched = worker_round_robin(8, 2)
+    sched[3] = 5  # k(3) = 5 > 3: folds a version from the future
+    with pytest.raises(ValueError, match="causality"):
+        resolve_schedule(sched, 8)
+
+
+def test_negative_version_rejected():
+    sched = constant_delay(8, 1)
+    sched[0] = -1
+    with pytest.raises(ValueError, match="negative"):
+        resolve_schedule(sched, 8)
+
+
+def test_bad_provider_specs_rejected():
+    with pytest.raises(ValueError, match="unknown schedule kind"):
+        resolve_schedule(("zigzag", 3), 8)
+    with pytest.raises(ValueError, match="tau >= 0"):
+        resolve_schedule(("constant", -1), 8)
+    with pytest.raises(ValueError, match=">= 1 worker"):
+        resolve_schedule(("round_robin", 0), 8)
+    with pytest.raises(ValueError, match=">= 1 worker"):
+        resolve_schedule(0, 8)  # bare int = round_robin shorthand
+    with pytest.raises(TypeError, match="cannot resolve"):
+        resolve_schedule(object(), 8)
+
+
+def test_bare_int_and_tuple_agree():
+    np.testing.assert_array_equal(
+        resolve_schedule(4, 12), resolve_schedule(("round_robin", 4), 12)
+    )
+
+
+def test_callable_provider_is_validated():
+    sched = resolve_schedule(lambda n: np.maximum(0, np.arange(n) - 2), 9)
+    assert sched.shape == (9,)
+    with pytest.raises(ValueError, match="schedule shape"):
+        resolve_schedule(lambda n: np.zeros(n + 1, np.int32), 9)
+
+
+def test_cluster_spec_degenerate_single_worker():
+    """W=1 is the serial trainer: one worker can never outrun the fold
+    loop it feeds, so the realized schedule has zero staleness no matter
+    what the phase times are — and a zero-staleness schedule needs a
+    ring of exactly one version."""
+    for t_comm in (0.0, 5.0):  # even absurdly slow comms cannot add staleness
+        spec = ClusterSpec(
+            n_workers=1, t_build=1e-4, t_comm=t_comm, t_server=1e-4, seed=11
+        )
+        sched = resolve_schedule(spec, 16)
+        np.testing.assert_array_equal(sched, np.arange(16))
+        assert max_staleness(sched) == 0
+
+
+def test_round_robin_steady_state_staleness():
+    sched = resolve_schedule(("round_robin", 4), 32)
+    tail = np.arange(32)[8:] - sched[8:]
+    assert (tail == 3).all()  # steady state: tau = W - 1
+    assert max_staleness(sched) == 3
