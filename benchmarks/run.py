@@ -7,6 +7,7 @@ Artifacts land in experiments/*.json; summaries print as they finish.
 from __future__ import annotations
 
 import argparse
+import pathlib
 import time
 
 
@@ -42,8 +43,13 @@ def main() -> None:
 
     import importlib
 
+    # Harnesses assume the artifact sink exists even before the first
+    # save(); cheap to guarantee here (e.g. a fresh clone, a CI runner).
+    pathlib.Path("experiments").mkdir(parents=True, exist_ok=True)
+
     t00 = time.time()
     failures = []
+    skipped = []
     for name, module, desc in BENCHES:
         if only and name not in only:
             continue
@@ -51,12 +57,18 @@ def main() -> None:
         t0 = time.time()
         try:
             importlib.import_module(module).main(quick=not args.full)
+        except ImportError as e:
+            # Optional deps (plotting, profiling) missing from the host is
+            # not a benchmark failure — record the skip and keep going.
+            skipped.append(name)
+            print(f"  SKIPPED: missing dependency "
+                  f"({getattr(e, 'name', None) or e})")
         except Exception as e:  # noqa: BLE001 — keep the suite running
             failures.append(name)
             print(f"  FAILED: {type(e).__name__}: {e}")
         print(f"  ({time.time() - t0:.1f}s)", flush=True)
     print(f"\nall benchmarks done in {time.time() - t00:.1f}s; "
-          f"failures: {failures or 'none'}")
+          f"skipped: {skipped or 'none'}; failures: {failures or 'none'}")
     if failures:
         raise SystemExit(1)
 

@@ -1,0 +1,353 @@
+"""Pallas TPU kernel: ONE fused program per tree level.
+
+The staged build pays three HBM round-trips per level: the histogram kernel
+writes the (2, L, F, B) level histogram, ``split_scan`` reads it back and
+writes the (L, F, B) gain surface, and the learner reads THAT back for the
+argmax before a fourth pass re-routes every sample. This kernel fuses the
+whole level:
+
+  phase A (grid steps 0..ns-1) — stream sample blocks from HBM (the grid
+      pipeline double-buffers the DMA) and accumulate the built nodes'
+      grad/hess histogram in a VMEM scratch via the same one-hot MXU
+      contraction as ``histogram.py`` — identical dot shapes, identical
+      accumulation order, so single-shard results stay bit-compatible with
+      the staged kernel;
+  phase B (first step of the partition sweep) — derive the sibling rows
+      from the cached parent histogram (subtract mode), run the cumulative
+      split-gain scan IN REGISTERS over the full (L, F, B) block, apply
+      the feature mask, argmax, and fix unsplittable nodes to the
+      pass-left convention — only the (2, L, F, B) level histogram (the
+      next level's subtraction cache) and three (L,)-sized split vectors
+      ever reach HBM, never a gain surface;
+  phase C (grid steps ns..2*ns-1) — second sample sweep: gather each
+      sample's node's winning (feature, threshold) from the VMEM-resident
+      split tables and emit the new row -> node map.
+
+Grid: (2 * ns,) — ns sample-block steps of histogram accumulation, then ns
+steps of partition. Scalars (lam, min_child_hess) ride in SMEM; everything
+data-dependent (the active-node subset, the feature mask) is an operand so
+one compiled program serves a whole training run.
+
+The row -> node semantics, the gain formula, the validity mask, and the
+argmax tie-break (first maximum in (f * B + b) row-major order) all match
+``ref.level_build_ref`` / the staged ``trees.learner`` path exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _level_kernel(
+    bins_ref,  # (S_blk, F_pad) int32
+    node_ref,  # (S_blk, 1) int32, -1 = inactive
+    grad_ref,  # (S_blk, 1) f32
+    hess_ref,  # (S_blk, 1) f32
+    rowmap_ref,  # (2 * L_sub, 1) int32 — node id each GH row selects
+    parent_ref,  # (2, L_par, FB_pad) f32 — parent cache (zeros in full mode)
+    mask_ref,  # (1, F_pad) f32 — 1.0 = feature in this tree's subsample
+    params_ref,  # (2,) f32 in SMEM — [lam, min_child_hess]
+    hist_ref,  # out (2, L, FB_pad) f32 — the full level histogram
+    split_ref,  # out (2, L) int32 — [best_feature; best_bin] per node
+    gain_ref,  # out (1, L) f32 — best gain per node (pre pass-left fix)
+    node_out_ref,  # out (S_blk, 1) int32 — new row -> node map
+    acc_ref,  # scratch (2 * L_sub, FB_pad) f32 — built-row accumulator
+    *,
+    ns: int,
+    n_bins: int,
+    feature_block: int,
+    n_nodes: int,
+    derive_sibling: bool,
+):
+    t = pl.program_id(0)
+    s_blk, f_pad = bins_ref.shape
+    rows = acc_ref.shape[0]  # 2 * L_sub
+    l_sub = rows // 2
+    l = n_nodes
+    n_chunks = f_pad // feature_block
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(t < ns)
+    def _accumulate():
+        # Same GH factor as histogram.py: row 2r carries grad, 2r+1 hess,
+        # both masked to samples currently on node rowmap[2r]. One dot of
+        # identical shape per (feature chunk, sample block) keeps the
+        # per-cell f32 accumulation order bit-compatible with the staged
+        # kernel's (feature_blocks, sample_blocks) grid.
+        node = node_ref[:, 0]
+        grad = grad_ref[:, 0]
+        hess = hess_ref[:, 0]
+        row_node = rowmap_ref[:, 0]
+        row_is_h = jax.lax.broadcasted_iota(jnp.int32, (rows, s_blk), 0) % 2
+        gh_val = jnp.where(row_is_h == 0, grad[None, :], hess[None, :])
+        gh = jnp.where(row_node[:, None] == node[None, :], gh_val, 0.0)
+        for c in range(n_chunks):
+            blk = bins_ref[:, c * feature_block : (c + 1) * feature_block]
+            bin_iota = jax.lax.broadcasted_iota(
+                jnp.int32, (s_blk, feature_block, n_bins), 2
+            )
+            onehot = (blk[..., None] == bin_iota).astype(jnp.float32)
+            onehot = onehot.reshape(s_blk, feature_block * n_bins)
+            lo, hi = c * feature_block * n_bins, (c + 1) * feature_block * n_bins
+            acc_ref[:, lo:hi] += jax.lax.dot(
+                gh, onehot, preferred_element_type=jnp.float32
+            )
+
+    @pl.when(t == ns)
+    def _decide():
+        fb = f_pad * n_bins
+        acc = acc_ref[...].reshape(l_sub, 2, f_pad, n_bins)
+        g_built, h_built = acc[:, 0], acc[:, 1]  # (L_sub, F_pad, B)
+        if derive_sibling:
+            # Node n (parent p = n >> 1) is either the built child or the
+            # derived sibling ``parent - built`` — the subtraction runs on
+            # the already-merged parent cache, so under shard_map the
+            # learner keeps the collective BEFORE this kernel (see
+            # ps/sharded.py); single-shard, this is the same arithmetic as
+            # the staged learner's post-psum gather.
+            par = parent_ref[...].reshape(2, l_sub, f_pad, n_bins)
+            built2 = jnp.repeat(  # row p -> nodes 2p, 2p+1
+                jnp.stack([g_built, h_built]), 2, axis=1
+            )  # (2, L, F_pad, B)
+            par2 = jnp.repeat(par, 2, axis=1)
+            built_ids = rowmap_ref[:, 0].reshape(l_sub, 2)[:, 0]  # (L_sub,)
+            is_built = (
+                jax.lax.broadcasted_iota(jnp.int32, (l,), 0)
+                == jnp.repeat(built_ids, 2)
+            )
+            full = jnp.where(is_built[None, :, None, None], built2, par2 - built2)
+            g_full, h_full = full[0], full[1]
+        else:
+            g_full, h_full = g_built, h_built  # L_sub == L
+        hist_ref[0] = g_full.reshape(l, fb)
+        hist_ref[1] = h_full.reshape(l, fb)
+
+        # In-register split scan — the exact split_scan.py / ref formula.
+        lam = params_ref[0]
+        min_h = params_ref[1]
+        gl = jnp.cumsum(g_full, axis=-1)
+        hl = jnp.cumsum(h_full, axis=-1)
+        gt, ht = gl[..., -1:], hl[..., -1:]
+        gr, hr = gt - gl, ht - hl
+        gain = gl * gl / (hl + lam) + gr * gr / (hr + lam) - gt * gt / (ht + lam)
+        bin_pos = jax.lax.broadcasted_iota(jnp.int32, gain.shape, 2)
+        valid = (hl >= min_h) & (hr >= min_h) & (bin_pos < n_bins - 1)
+        valid = valid & (mask_ref[0, :][None, :, None] > 0.0)
+        gain = jnp.where(valid, gain, -jnp.inf)
+
+        # Argmax with the first-maximum tie-break (== jnp.argmax): max,
+        # then the smallest flat index attaining it.
+        flat = gain.reshape(l, fb)
+        best = jnp.max(flat, axis=-1, keepdims=True)  # (L, 1)
+        pos = jax.lax.broadcasted_iota(jnp.int32, (l, fb), 1)
+        idx = jnp.min(jnp.where(flat == best, pos, fb), axis=-1)  # (L,)
+        best = best[:, 0]
+        ok = jnp.isfinite(best) & (best > 0.0)
+        feat = jnp.where(ok, idx // n_bins, 0).astype(jnp.int32)
+        thr = jnp.where(ok, idx % n_bins, n_bins - 1).astype(jnp.int32)
+        split_ref[0, :] = feat
+        split_ref[1, :] = thr
+        gain_ref[0, :] = best
+
+    @pl.when(t >= ns)
+    def _partition():
+        # Route every sample: gather its node's winning (feature, bin)
+        # from the VMEM-resident split table (one-hot contractions — no
+        # TPU gathers), read the sample's bin for that feature, go right
+        # iff bin > threshold. Matches the staged learner's
+        # ``2 * node + (bins[s, feat[node]] > thr[node])`` update.
+        node = node_ref[:, 0]  # (S,)
+        onehot_l = (
+            node[:, None] == jax.lax.broadcasted_iota(jnp.int32, (s_blk, l), 1)
+        ).astype(jnp.float32)
+        table = jnp.concatenate(  # (L, 2): feature and threshold columns
+            [
+                split_ref[0, :][:, None].astype(jnp.float32),
+                split_ref[1, :][:, None].astype(jnp.float32),
+            ],
+            axis=1,
+        )
+        sel = jax.lax.dot(onehot_l, table, preferred_element_type=jnp.float32)
+        feat_s = sel[:, 0].astype(jnp.int32)  # exact: values < F_pad
+        thr_s = sel[:, 1]
+        f_iota = jax.lax.broadcasted_iota(jnp.int32, (s_blk, f_pad), 1)
+        val = jnp.sum(
+            jnp.where(f_iota == feat_s[:, None], bins_ref[...], 0), axis=1
+        ).astype(jnp.float32)
+        go_right = (val > thr_s).astype(jnp.int32)
+        node_out_ref[:, 0] = 2 * node + go_right
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_nodes",
+        "n_bins",
+        "derive_sibling",
+        "sample_block",
+        "feature_block",
+        "interpret",
+    ),
+)
+def level_build_pallas(
+    bins: jax.Array,  # (N_pad, F_pad) int32 — wrapper pads both axes
+    node_ids: jax.Array,  # (N_pad,) int32, -1 = padding/inactive
+    grad: jax.Array,  # (N_pad,) f32
+    hess: jax.Array,  # (N_pad,) f32
+    active_nodes: jax.Array,  # (L_sub,) int32 node ids to histogram
+    parent_hist: jax.Array | None,  # (2, L_sub, F_pad, B) merged parent cache
+    feat_mask: jax.Array,  # (F_pad,) f32 — 1.0 = feature available
+    lam: jax.Array,
+    min_child_hess: jax.Array,
+    n_nodes: int,
+    n_bins: int,
+    derive_sibling: bool = False,
+    sample_block: int = 512,
+    feature_block: int = 8,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One fused level: (hist (2, L, F_pad, B), feat (L,), thr (L,),
+    best_gain (L,), new_node (N_pad,)). See the module docstring.
+
+    ``derive_sibling=False`` is the full-level build (``active_nodes`` must
+    enumerate all ``n_nodes``); ``True`` is the subtraction mode —
+    ``active_nodes[p]`` is the smaller child of parent ``p`` and
+    ``parent_hist`` the (already psum-merged, when sharded) previous-level
+    cache. ``interpret=None`` auto-detects like every kernel here.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, f_pad = bins.shape
+    assert n % sample_block == 0, "wrapper must pad samples"
+    assert f_pad % feature_block == 0, "wrapper must pad features"
+    ns = n // sample_block
+    l_sub = active_nodes.shape[0]
+    if derive_sibling:
+        assert parent_hist is not None and 2 * l_sub == n_nodes
+    else:
+        assert l_sub == n_nodes
+        parent_hist = jnp.zeros((2, l_sub, f_pad, n_bins), jnp.float32)
+    fb = f_pad * n_bins
+    row_map = jnp.repeat(active_nodes.astype(jnp.int32), 2)
+    params = jnp.stack(
+        [jnp.asarray(lam, jnp.float32), jnp.asarray(min_child_hess, jnp.float32)]
+    )
+
+    kernel = functools.partial(
+        _level_kernel,
+        ns=ns,
+        n_bins=n_bins,
+        feature_block=feature_block,
+        n_nodes=n_nodes,
+        derive_sibling=derive_sibling,
+    )
+    sample_map = lambda t: (jax.lax.rem(t, ns), 0)
+    hist, split, gain, new_node = pl.pallas_call(
+        kernel,
+        grid=(2 * ns,),
+        in_specs=[
+            pl.BlockSpec((sample_block, f_pad), sample_map),
+            pl.BlockSpec((sample_block, 1), sample_map),
+            pl.BlockSpec((sample_block, 1), sample_map),
+            pl.BlockSpec((sample_block, 1), sample_map),
+            pl.BlockSpec((2 * l_sub, 1), lambda t: (0, 0)),
+            pl.BlockSpec((2, l_sub, fb), lambda t: (0, 0, 0)),
+            pl.BlockSpec((1, f_pad), lambda t: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((2, n_nodes, fb), lambda t: (0, 0, 0)),
+            pl.BlockSpec((2, n_nodes), lambda t: (0, 0)),
+            pl.BlockSpec((1, n_nodes), lambda t: (0, 0)),
+            pl.BlockSpec(
+                (sample_block, 1),
+                lambda t: (jnp.where(t < ns, 0, t - ns), 0),
+            ),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((2, n_nodes, fb), jnp.float32),
+            jax.ShapeDtypeStruct((2, n_nodes), jnp.int32),
+            jax.ShapeDtypeStruct((1, n_nodes), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((2 * l_sub, fb), jnp.float32)],
+        interpret=interpret,
+    )(
+        bins,
+        node_ids[:, None],
+        grad[:, None],
+        hess[:, None],
+        row_map[:, None],
+        parent_hist.reshape(2, l_sub, fb),
+        feat_mask[None, :].astype(jnp.float32),
+        params,
+    )
+    return (
+        hist.reshape(2, n_nodes, f_pad, n_bins),
+        split[0],
+        split[1],
+        gain[0],
+        new_node[:, 0],
+    )
+
+
+# Fall back to the staged pipeline when a level's resident set would not
+# leave headroom in the ~16 MB/core VMEM (DESIGN.md §13 has the budget
+# math). Deep wide levels are exactly where histogram tiling wins anyway.
+FUSED_VMEM_BUDGET = 12 * 2**20
+
+
+def fused_level_fits(
+    n: int,
+    n_nodes: int,
+    n_sub: int,
+    n_feat: int,
+    n_bins: int,
+    budget: int = FUSED_VMEM_BUDGET,
+) -> bool:
+    """Whether one fused level fits the VMEM budget at its tuned blocks."""
+    from repro.kernels import autotune
+
+    blocks = autotune.lookup(n, n_feat, n_bins, n_nodes)
+    return (
+        fused_level_vmem_bytes(
+            n_nodes, n_sub, n_feat, n_bins,
+            blocks["sample_block"], blocks["feature_block"],
+        )
+        <= budget
+    )
+
+
+def fused_level_vmem_bytes(
+    n_nodes: int,
+    n_sub: int,
+    n_feat: int,
+    n_bins: int,
+    sample_block: int,
+    feature_block: int,
+) -> int:
+    """The fused program's peak VMEM footprint model (DESIGN.md §13).
+
+    Resident blocks: the built-row accumulator (2*L_sub, F, B), the parent
+    cache (2, L_sub, F, B), the level-histogram output window
+    (2, L, F, B), the (S_blk, F) bins block, and phase B's scan
+    temporaries (~3 extra (L, F, B) values for cumsums and the gain).
+    The learner falls back to the staged path for any level whose estimate
+    exceeds the budget — deep wide levels, where histogram tiling is the
+    right call anyway.
+    """
+    fb = n_feat * n_bins
+    acc = 2 * n_sub * fb
+    parent = 2 * n_sub * fb
+    hist_out = 2 * n_nodes * fb
+    bins_blk = sample_block * n_feat
+    onehot = sample_block * feature_block * n_bins
+    scan_tmp = 3 * n_nodes * fb
+    return 4 * (acc + parent + hist_out + bins_blk + onehot + scan_tmp)

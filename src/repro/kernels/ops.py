@@ -16,9 +16,30 @@ from repro.kernels import ref as _ref
 from repro.kernels.histogram import histogram_pallas
 from repro.kernels.split_scan import split_gain_pallas
 
+BACKENDS = ("auto", "ref", "pallas", "fused")
+
 
 def _default_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def resolve_backend(backend: str, allow_fused: bool = False) -> str:
+    """THE backend normalization — learner, ops, and the fused path share it.
+
+    ``'auto'`` resolves to ``'pallas'`` on TPU and ``'ref'`` elsewhere.
+    ``'fused'`` (the whole-level program) survives only where a caller can
+    actually run it (``allow_fused=True``: the tree learner's level loop
+    and ``level_build``); staged kernel entry points degrade it to
+    ``'pallas'`` — the fused pipeline IS the pallas kernel family, so a
+    staged call inside a fused build stays in the same numerics.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r} (want one of {BACKENDS})")
+    if backend == "auto":
+        return _default_backend()
+    if backend == "fused" and not allow_fused:
+        return "pallas"
+    return backend
 
 
 def _pad_to(x: jax.Array, multiple: int, axis: int, fill) -> jax.Array:
@@ -51,11 +72,10 @@ def build_histogram(
     cell is a sum over disjoint sample subsets, so partial sums compose
     exactly (the parameter-server aggregation as an all-reduce).
     """
-    if backend == "auto":
-        backend = _default_backend()
+    backend = resolve_backend(backend)
     if backend == "ref":
         out = _ref.histogram_ref(bins, node_ids, grad, hess, n_nodes, n_bins)
-    elif backend == "pallas":
+    else:
         interpret = jax.default_backend() != "tpu"
         n_feat = bins.shape[1]
         fb = min(feature_block, n_feat)
@@ -67,8 +87,6 @@ def build_histogram(
             binsp, nodep, gradp, hessp, n_nodes, n_bins,
             sample_block=sample_block, feature_block=fb, interpret=interpret,
         )[:, :, :n_feat, :]
-    else:
-        raise ValueError(f"unknown backend {backend!r}")
     if axis_name is not None:
         out = jax.lax.psum(out, axis_name)
     return out
@@ -101,14 +119,13 @@ def build_histogram_subset(
     subtracts after the collective so every shard derives the sibling from
     identical merged values and stays in lockstep.
     """
-    if backend == "auto":
-        backend = _default_backend()
+    backend = resolve_backend(backend)
     active_nodes = active_nodes.astype(jnp.int32)
     if backend == "ref":
         out = _ref.histogram_subset_ref(
             bins, node_ids, grad, hess, active_nodes, n_nodes, n_bins
         )
-    elif backend == "pallas":
+    else:
         interpret = jax.default_backend() != "tpu"
         n_feat = bins.shape[1]
         fb = min(feature_block, n_feat)
@@ -121,8 +138,6 @@ def build_histogram_subset(
             sample_block=sample_block, feature_block=fb, interpret=interpret,
             active_nodes=active_nodes,
         )[:, :, :n_feat, :]
-    else:
-        raise ValueError(f"unknown backend {backend!r}")
     if axis_name is not None:
         out = jax.lax.psum(out, axis_name)
     return out
@@ -137,14 +152,11 @@ def split_gain(
     feature_block: int = 8,
 ) -> jax.Array:
     """Gain surface (L, F, B), -inf where invalid."""
-    if backend == "auto":
-        backend = _default_backend()
+    backend = resolve_backend(backend)
     lam = jnp.asarray(lam, jnp.float32)
     minh = jnp.asarray(min_child_hess, jnp.float32)
     if backend == "ref":
         return _split_gain_surface_ref(hist, lam, minh)
-    if backend != "pallas":
-        raise ValueError(f"unknown backend {backend!r}")
     interpret = jax.default_backend() != "tpu"
     _, l, f, _ = hist.shape
     lb = min(node_block, l)
@@ -182,6 +194,73 @@ def best_split(
     return best, (idx // nb).astype(jnp.int32), (idx % nb).astype(jnp.int32)
 
 
+def level_build(
+    bins: jax.Array,  # (N, F) int32
+    node_ids: jax.Array,  # (N,) int32 level-local node per sample
+    grad: jax.Array,  # (N,) f32
+    hess: jax.Array,  # (N,) f32
+    active_nodes: jax.Array,  # (L_sub,) int32 nodes to histogram
+    parent_hist: jax.Array | None,  # (2, L_sub, F, B) cache (subtract mode)
+    feat_mask: jax.Array,  # (F,) bool/f32 — the tree's feature subsample
+    lam,
+    min_child_hess,
+    n_nodes: int,
+    n_bins: int,
+    backend: str = "fused",
+    derive_sibling: bool = False,
+    sample_block: int | None = None,
+    feature_block: int | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """ONE fused tree level: histogram -> (sibling derive) -> gain scan ->
+    argmax -> partition, without staging any surface through HBM.
+
+    Returns ``(hist (2, n_nodes, F, B), best_feature (n_nodes,), best_bin
+    (n_nodes,), best_gain (n_nodes,), new_node (N,))`` — everything
+    ``trees.learner.build_tree`` needs from a level: the histogram is the
+    next level's subtraction cache, feat/thr are final (unsplittable nodes
+    already fixed to pass-left), and ``new_node`` is the re-routed
+    row -> node map. ``backend='ref'`` is the staged jnp oracle
+    (``ref.level_build_ref``); ``'pallas'``/``'fused'`` run the fused
+    kernel. Block shapes default to the persistent autotuner table
+    (``kernels.autotune``) for the (N, F, B, L) geometry.
+    """
+    backend = resolve_backend(backend, allow_fused=True)
+    if backend == "ref":
+        return _ref.level_build_ref(
+            bins, node_ids, grad, hess, active_nodes.astype(jnp.int32),
+            parent_hist, feat_mask, jnp.asarray(lam, jnp.float32),
+            jnp.asarray(min_child_hess, jnp.float32), n_nodes, n_bins,
+            derive_sibling=derive_sibling,
+        )
+    from repro.kernels import autotune
+    from repro.kernels.level_build import level_build_pallas
+
+    n, n_feat = bins.shape
+    if sample_block is None or feature_block is None:
+        tuned = autotune.lookup(n, n_feat, n_bins, n_nodes)
+        sample_block = sample_block or tuned["sample_block"]
+        feature_block = feature_block or tuned["feature_block"]
+    interpret = jax.default_backend() != "tpu"
+    sb = min(sample_block, max(n, 1))
+    fb = min(feature_block, n_feat)
+    binsp = _pad_to(_pad_to(bins, sb, 0, 0), fb, 1, 0)
+    nodep = _pad_to(node_ids, sb, 0, -1)  # padded samples inactive
+    gradp = _pad_to(grad, sb, 0, 0.0)
+    hessp = _pad_to(hess, sb, 0, 0.0)
+    maskp = _pad_to(feat_mask.astype(jnp.float32), fb, 0, 0.0)
+    parentp = None
+    if derive_sibling:
+        parentp = _pad_to(parent_hist, fb, 2, 0.0)
+    hist, feat, thr, best, new_node = level_build_pallas(
+        binsp, nodep, gradp, hessp, active_nodes.astype(jnp.int32), parentp,
+        maskp, jnp.asarray(lam, jnp.float32),
+        jnp.asarray(min_child_hess, jnp.float32), n_nodes, n_bins,
+        derive_sibling=derive_sibling, sample_block=sb, feature_block=fb,
+        interpret=interpret,
+    )
+    return hist[:, :, :n_feat, :], feat, thr, best, new_node[:n]
+
+
 apply_forest = _ref.apply_forest_ref  # unmasked train-time form (zero-padded slots)
 
 
@@ -207,16 +286,13 @@ def forest_traverse(
     (padded tree slots are masked by ``n_trees``, so padding never leaks
     into any output column).
     """
-    if backend == "auto":
-        backend = _default_backend()
+    backend = resolve_backend(backend)
     n_trees = jnp.asarray(n_trees, jnp.int32)
     if backend == "ref":
         return _ref.apply_forest_ref(
             bins, feature, threshold, leaf_value, depth, n_trees,
             n_outputs=n_outputs,
         )
-    if backend != "pallas":
-        raise ValueError(f"unknown backend {backend!r}")
     from repro.kernels.forest_traversal import forest_traverse_pallas
 
     interpret = jax.default_backend() != "tpu"
@@ -303,8 +379,7 @@ def flash_attention(
     block sizes and flattens (B, H) into the kernel's head-grid axis.
     Differentiable: forward is the Pallas kernel (O(S) memory), backward
     recomputes through the jnp oracle (see _flash_vjp_bwd)."""
-    if backend == "auto":
-        backend = _default_backend()
+    backend = resolve_backend(backend)
     b, sq, h, hd = q.shape
     _, sk, kv, _ = k.shape
     group = h // kv

@@ -77,6 +77,72 @@ def histogram_subset_ref(
     return out.astype(jnp.float32)
 
 
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins", "derive_sibling"))
+def level_build_ref(
+    bins: jax.Array,  # (N, F) int32 bin ids
+    node_ids: jax.Array,  # (N,) int32 level-local node per sample, -1 inactive
+    grad: jax.Array,  # (N,) f32
+    hess: jax.Array,  # (N,) f32
+    active_nodes: jax.Array,  # (L_sub,) int32 node ids to histogram
+    parent_hist: jax.Array | None,  # (2, L_sub, F, B) previous-level cache
+    feat_mask: jax.Array,  # (F,) bool/f32 — available features
+    lam: jax.Array,
+    min_child_hess: jax.Array,
+    n_nodes: int,
+    n_bins: int,
+    derive_sibling: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """The fused level-build oracle: (hist (2, L, F, B), best_feature (L,),
+    best_bin (L,), best_gain (L,), new_node (N,)).
+
+    The staged ``trees.learner`` level body as one function — histogram
+    (subset + sibling derivation in subtract mode), gain scan, feature
+    mask, argmax with the first-maximum tie-break, the unsplittable
+    pass-left fix (feature 0, threshold ``n_bins - 1``), and the
+    ``2 * node + go_right`` re-route. ``kernels.level_build`` must match
+    this to f32 tolerance (bitwise at a single sample block).
+    """
+    built = histogram_subset_ref(
+        bins, node_ids, grad, hess, active_nodes, n_nodes, n_bins
+    )
+    if derive_sibling:
+        node_iota = jnp.arange(n_nodes, dtype=jnp.int32)
+        par_of = node_iota >> 1
+        is_built = node_iota == active_nodes[par_of]
+        built_rows = built[:, par_of]
+        hist = jnp.where(
+            is_built[None, :, None, None],
+            built_rows,
+            parent_hist[:, par_of] - built_rows,
+        )
+    else:
+        hist = built  # active_nodes must enumerate 0..n_nodes-1 in order
+
+    g, h = hist[0], hist[1]
+    gl = jnp.cumsum(g, axis=-1)
+    hl = jnp.cumsum(h, axis=-1)
+    gt, ht = gl[..., -1:], hl[..., -1:]
+    gr, hr = gt - gl, ht - hl
+    gain = gl**2 / (hl + lam) + gr**2 / (hr + lam) - gt**2 / (ht + lam)
+    valid = (hl >= min_child_hess) & (hr >= min_child_hess)
+    valid = valid.at[..., -1].set(False)
+    gain = jnp.where(valid, gain, -jnp.inf)
+    gain = jnp.where(feat_mask[None, :, None] > 0, gain, -jnp.inf)
+
+    flat = gain.reshape(n_nodes, -1)
+    idx = jnp.argmax(flat, axis=-1)
+    best = jnp.take_along_axis(flat, idx[:, None], axis=-1)[:, 0]
+    ok = jnp.isfinite(best) & (best > 0.0)
+    feat = jnp.where(ok, idx // n_bins, 0).astype(jnp.int32)
+    thr = jnp.where(ok, idx % n_bins, n_bins - 1).astype(jnp.int32)
+
+    node_c = jnp.clip(node_ids, 0, n_nodes - 1)
+    val = jnp.take_along_axis(bins, jnp.take(feat, node_c)[:, None], axis=1)[:, 0]
+    go_right = (val > jnp.take(thr, node_c)).astype(jnp.int32)
+    new_node = jnp.where(node_ids >= 0, 2 * node_ids + go_right, 2 * node_ids)
+    return hist, feat, thr, best, new_node
+
+
 @jax.jit
 def split_scan_ref(
     hist: jax.Array,  # (2, L, F, B) f32 grad/hess histograms

@@ -17,13 +17,17 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
-def _split_kernel(g_ref, h_ref, lam_ref, minh_ref, gain_ref):
+def _split_kernel(g_ref, h_ref, params_ref, gain_ref):
     g = g_ref[...]  # (L_blk, F_blk, B)
     h = h_ref[...]
-    lam = lam_ref[0, 0]
-    min_h = minh_ref[0, 0]
+    # Scalars ride in SMEM via scalar prefetch — available before the tile
+    # DMA lands, and never occupying a (1, 1) vector tile like the old
+    # ``pl.ANY`` placement did.
+    lam = params_ref[0]
+    min_h = params_ref[1]
 
     gl = jnp.cumsum(g, axis=-1)
     hl = jnp.cumsum(h, axis=-1)
@@ -59,8 +63,10 @@ def split_gain_pallas(
         interpret = jax.default_backend() != "tpu"
     _, l, f, b = hist.shape
     assert l % node_block == 0 and f % feature_block == 0
-    lam2 = jnp.asarray(lam, jnp.float32).reshape(1, 1)
-    minh2 = jnp.asarray(min_child_hess, jnp.float32).reshape(1, 1)
+    params = jnp.stack([
+        jnp.asarray(lam, jnp.float32),
+        jnp.asarray(min_child_hess, jnp.float32),
+    ])  # (2,) SMEM-resident scalars
 
     return pl.pallas_call(
         _split_kernel,
@@ -68,12 +74,11 @@ def split_gain_pallas(
         in_specs=[
             pl.BlockSpec((node_block, feature_block, b), lambda lb, fb: (lb, fb, 0)),
             pl.BlockSpec((node_block, feature_block, b), lambda lb, fb: (lb, fb, 0)),
-            pl.BlockSpec((1, 1), lambda lb, fb: (0, 0), memory_space=pl.ANY),
-            pl.BlockSpec((1, 1), lambda lb, fb: (0, 0), memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
         out_specs=pl.BlockSpec(
             (node_block, feature_block, b), lambda lb, fb: (lb, fb, 0)
         ),
         out_shape=jax.ShapeDtypeStruct((l, f, b), jnp.float32),
         interpret=interpret,
-    )(hist[0], hist[1], lam2, minh2)
+    )(hist[0], hist[1], params)

@@ -103,7 +103,8 @@ def run_gbdt(args) -> None:
         sampling_rate=args.sample or 0.8,
         objective=args.objective,
         learner=LearnerConfig(
-            depth=6, n_bins=64, feature_fraction=0.8, hist_mode=args.hist_mode
+            depth=6, n_bins=64, feature_fraction=0.8, hist_mode=args.hist_mode,
+            backend=args.backend,
         ),
     )
     if args.runtime == "threads":
@@ -216,6 +217,13 @@ def main() -> None:
                          "each split's sibling from the cached parent "
                          "histogram (~half the kernel work); 'rebuild' "
                          "re-histograms every node (exact reference mode)")
+    ap.add_argument("--backend", choices=("auto", "ref", "pallas", "fused"),
+                    default="auto",
+                    help="GBDT kernel backend: 'fused' runs one Pallas "
+                         "program per tree level (histogram+scan+partition "
+                         "without HBM staging); 'pallas' is the staged "
+                         "kernel pipeline; 'ref' the jnp oracles; 'auto' "
+                         "picks pallas on TPU, ref elsewhere")
     ap.add_argument("--objective", default="logistic",
                     help="GBDT objective registry spec: logistic | mse | "
                          "quantile[:a] | huber | multiclass:K | lambdarank")

@@ -21,6 +21,28 @@ Histogram modes (``LearnerConfig.hist_mode``):
 Either mode is deterministic WITHIN itself: the threaded runtime's
 record-and-replay contract (DESIGN.md §11) holds bit-for-bit per mode.
 
+Backends (``LearnerConfig.backend``), resolved through the shared
+``kernels.ops.resolve_backend``:
+  * ``'ref'`` — pure-jnp oracles (production CPU path);
+  * ``'pallas'`` — the STAGED kernel pipeline: histogram kernel, split-gain
+    kernel, jnp partition, one HBM round-trip between each;
+  * ``'fused'`` — ONE Pallas program per level (``kernels.level_build``):
+    histogram accumulation, sibling derivation, gain scan, argmax, and the
+    row re-route without staging any surface through HBM. Falls back to the
+    staged pallas pipeline per level when the level's resident set exceeds
+    the VMEM budget, and entirely under ``shard_map`` (``axis_name`` set):
+    the split decision must see the psum-MERGED histograms, so the
+    collective seam forces the staged order (see ``ps/sharded.py``);
+  * ``'auto'`` — pallas on TPU, ref elsewhere.
+The fused program is bit-compatible with the staged pallas path at MATCHED
+block shapes (same dot shapes in the same order). In the learner the fused
+path takes its blocks from the committed autotuner table
+(``kernels/autotune.py``), which may group the accumulation differently
+than the staged defaults — cross-backend runs then agree like the hist
+modes do: identically wherever gains are decisively separated, with
+near-tied deep splits free to flip within f32 tolerance. DESIGN.md §13
+documents both contracts.
+
 Conventions:
   * Caller supplies per-sample (g_i, h_i). For the paper's plain gradient
     step, g_i = m'_i * l'_i and h_i = m'_i (leaf value = - mean residual).
@@ -47,7 +69,7 @@ class LearnerConfig(NamedTuple):
     lam: float = 1.0  # L2 on leaf values
     min_child_hess: float = 1e-3
     feature_fraction: float = 0.8  # paper samples 80% of features per tree
-    backend: str = "ref"  # 'ref' | 'pallas' | 'auto'
+    backend: str = "ref"  # 'ref' | 'pallas' | 'fused' | 'auto'
     # Mesh axis samples are sharded over when building under shard_map
     # (repro.ps.sharded): histograms and leaf stats psum across it; the rng
     # must be replicated so every shard draws the same feature mask.
@@ -58,6 +80,31 @@ class LearnerConfig(NamedTuple):
     hist_mode: str = "subtract"
 
 
+def _check_hist_mode(cfg: LearnerConfig) -> None:
+    if cfg.hist_mode not in ("subtract", "rebuild"):
+        raise ValueError(
+            f"unknown hist_mode {cfg.hist_mode!r} (want 'subtract'|'rebuild')"
+        )
+
+
+def _smaller_children(
+    cfg: LearnerConfig, node: jax.Array, h: jax.Array, n_nodes: int
+) -> jax.Array:
+    """The subtraction builder's per-parent smaller child, (n_nodes // 2,).
+
+    "Smaller" is by per-node hessian mass — the drawn-sample count in the
+    paper's gradient step (h_i = m'_i) — so inert samples (h == 0) stay
+    inert in the builder's control flow too, not just in its sums. Under
+    shard_map the counts psum first: every shard must pick the SAME child.
+    """
+    counts = jax.ops.segment_sum(h, node, num_segments=n_nodes)
+    if cfg.axis_name is not None:
+        counts = jax.lax.psum(counts, cfg.axis_name)
+    parents = jnp.arange(n_nodes // 2, dtype=jnp.int32)
+    go_odd = (counts[0::2] > counts[1::2]).astype(jnp.int32)
+    return 2 * parents + go_odd
+
+
 def _level_histogram(
     cfg: LearnerConfig,
     bins: jax.Array,
@@ -66,37 +113,26 @@ def _level_histogram(
     h: jax.Array,
     level: int,
     parent_hist: jax.Array | None,  # (2, 2^(level-1), F, B) from last level
+    backend: str | None = None,
 ) -> jax.Array:
     """The (2, 2^level, F, B) histogram of one level, by the config's mode."""
     n_nodes = 1 << level
-    if cfg.hist_mode not in ("subtract", "rebuild"):
-        raise ValueError(
-            f"unknown hist_mode {cfg.hist_mode!r} (want 'subtract'|'rebuild')"
-        )
+    _check_hist_mode(cfg)
+    backend = cfg.backend if backend is None else backend
     if cfg.hist_mode == "rebuild" or level == 0:
         return ops.build_histogram(
             bins, node, g, h, n_nodes, n_bins=cfg.n_bins,
-            backend=cfg.backend, axis_name=cfg.axis_name,
+            backend=backend, axis_name=cfg.axis_name,
         )
 
     # Subtraction mode: histogram only the smaller child of every parent,
     # derive the sibling from the cached parent histogram. Children
     # partition the parent's samples, so parent = left + right exactly;
     # the derived sibling differs from a rebuilt one only by f32 rounding.
-    # "Smaller" is by per-node hessian mass — the drawn-sample count in the
-    # paper's gradient step (h_i = m'_i) — so inert samples (h == 0) stay
-    # inert in the builder's control flow too, not just in its sums.
-    counts = jax.ops.segment_sum(h, node, num_segments=n_nodes)
-    if cfg.axis_name is not None:
-        # Merged counts: every shard must pick the SAME child to build.
-        counts = jax.lax.psum(counts, cfg.axis_name)
-    parents = jnp.arange(n_nodes // 2, dtype=jnp.int32)
-    # Per-node select of the smaller child (2p or 2p+1), statically shaped.
-    go_odd = (counts[0::2] > counts[1::2]).astype(jnp.int32)
-    active = 2 * parents + go_odd  # (2^(level-1),)
+    active = _smaller_children(cfg, node, h, n_nodes)
     built = ops.build_histogram_subset(
         bins, node, g, h, active, n_nodes, cfg.n_bins,
-        backend=cfg.backend, axis_name=cfg.axis_name,
+        backend=backend, axis_name=cfg.axis_name,
     )  # (2, 2^(level-1), F, B), already psum'd across shards
     # Expand to the full level by a gather: node n (parent p = n >> 1) is
     # either the built child or the derived sibling. The subtraction runs
@@ -110,6 +146,69 @@ def _level_histogram(
     return jnp.where(is_built[None, :, None, None], built_rows, sibling_rows)
 
 
+def _staged_level(
+    cfg: LearnerConfig,
+    backend: str,
+    bins: jax.Array,
+    node: jax.Array,
+    g: jax.Array,
+    h: jax.Array,
+    feat_mask: jax.Array,
+    level: int,
+    parent_hist: jax.Array | None,
+):
+    """One level via the staged pipeline (histogram -> gain -> partition),
+    each stage round-tripping HBM. Returns (hist, feat, thr, new_node)."""
+    n_nodes, n_bins = 1 << level, cfg.n_bins
+    hist = _level_histogram(cfg, bins, node, g, h, level, parent_hist, backend)
+    gain = ops.split_gain(hist, cfg.lam, cfg.min_child_hess, backend=backend)
+    gain = jnp.where(feat_mask[None, :, None], gain, -jnp.inf)  # (L, F, B)
+
+    flat = gain.reshape(n_nodes, -1)
+    idx = jnp.argmax(flat, axis=-1)
+    best = jnp.take_along_axis(flat, idx[:, None], axis=-1)[:, 0]
+    feat = (idx // n_bins).astype(jnp.int32)
+    thr = (idx % n_bins).astype(jnp.int32)
+
+    # Unsplittable node -> pass-through: all samples go left.
+    ok = jnp.isfinite(best) & (best > 0.0)
+    feat = jnp.where(ok, feat, 0)
+    thr = jnp.where(ok, thr, n_bins - 1)
+
+    val = jnp.take_along_axis(bins, jnp.take(feat, node)[:, None], axis=1)[:, 0]
+    go_right = (val > jnp.take(thr, node)).astype(jnp.int32)
+    return hist, feat, thr, 2 * node + go_right
+
+
+def _fused_level(
+    cfg: LearnerConfig,
+    bins: jax.Array,
+    node: jax.Array,
+    g: jax.Array,
+    h: jax.Array,
+    feat_mask: jax.Array,
+    level: int,
+    parent_hist: jax.Array | None,
+):
+    """One level as ONE Pallas program (``kernels.level_build``): the level
+    histogram never leaves VMEM between build, scan, and partition; only
+    the next level's subtraction cache and the (L,)-sized split vectors
+    reach HBM. Same returns as ``_staged_level``."""
+    n_nodes = 1 << level
+    _check_hist_mode(cfg)
+    derive = cfg.hist_mode == "subtract" and level > 0
+    if derive:
+        active = _smaller_children(cfg, node, h, n_nodes)
+    else:
+        active = jnp.arange(n_nodes, dtype=jnp.int32)
+    hist, feat, thr, _, new_node = ops.level_build(
+        bins, node, g, h, active, parent_hist if derive else None,
+        feat_mask.astype(jnp.float32), cfg.lam, cfg.min_child_hess,
+        n_nodes, cfg.n_bins, backend="fused", derive_sibling=derive,
+    )
+    return hist, feat, thr, new_node
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def build_tree(
     cfg: LearnerConfig,
@@ -118,8 +217,25 @@ def build_tree(
     h: jax.Array,  # (N,) f32 — weighted hessian / sample weight
     rng: jax.Array,  # feature-subsampling key
 ) -> Tree:
+    from repro.kernels.level_build import fused_level_fits
+
     n, n_feat = bins.shape
     depth, n_bins = cfg.depth, cfg.n_bins
+
+    backend = ops.resolve_backend(cfg.backend, allow_fused=True)
+    # The fused program computes split decisions from the histograms it
+    # holds in VMEM — under shard_map those are LOCAL, and the decision
+    # must see the psum-merged level. The collective seam therefore pins
+    # the staged order (histogram -> psum -> scan); see ps/sharded.py.
+    use_fused = backend == "fused" and cfg.axis_name is None
+    if backend == "fused":
+        # The staged fallback: matched-block pallas when the fused program
+        # is merely over VMEM budget for a level; the platform default
+        # under shard_map, where interpret-mode pallas_call has no
+        # replication rule (the collective seam, see ps/sharded.py).
+        staged = "pallas" if cfg.axis_name is None else ops.resolve_backend("auto")
+    else:
+        staged = backend
 
     feat_mask = (
         jax.random.uniform(rng, (n_feat,)) < cfg.feature_fraction
@@ -134,27 +250,18 @@ def build_tree(
 
     for level in range(depth):
         n_nodes = 1 << level
-        hist = _level_histogram(cfg, bins, node, g, h, level, hist)
-        gain = ops.split_gain(hist, cfg.lam, cfg.min_child_hess, backend=cfg.backend)
-        gain = jnp.where(feat_mask[None, :, None], gain, -jnp.inf)  # (L, F, B)
-
-        flat = gain.reshape(n_nodes, -1)
-        idx = jnp.argmax(flat, axis=-1)
-        best = jnp.take_along_axis(flat, idx[:, None], axis=-1)[:, 0]
-        feat = (idx // n_bins).astype(jnp.int32)
-        thr = (idx % n_bins).astype(jnp.int32)
-
-        # Unsplittable node -> pass-through: all samples go left.
-        ok = jnp.isfinite(best) & (best > 0.0)
-        feat = jnp.where(ok, feat, 0)
-        thr = jnp.where(ok, thr, n_bins - 1)
-
+        n_sub = max(n_nodes // 2, 1) if (cfg.hist_mode == "subtract" and level) \
+            else n_nodes
+        if use_fused and fused_level_fits(n, n_nodes, n_sub, n_feat, n_bins):
+            hist, feat, thr, node = _fused_level(
+                cfg, bins, node, g, h, feat_mask, level, hist
+            )
+        else:
+            hist, feat, thr, node = _staged_level(
+                cfg, staged, bins, node, g, h, feat_mask, level, hist
+            )
         features.append(feat)
         thresholds.append(thr)
-
-        val = jnp.take_along_axis(bins, jnp.take(feat, node)[:, None], axis=1)[:, 0]
-        go_right = (val > jnp.take(thr, node)).astype(jnp.int32)
-        node = 2 * node + go_right  # level-local child index
 
     # Leaf statistics.
     n_leaves = 1 << depth
