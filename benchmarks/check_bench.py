@@ -1,0 +1,127 @@
+"""Bench-regression gate: diff a fresh BENCH_gbdt.json against the
+committed snapshot.
+
+``kernel_bench --check`` already gates fused-vs-staged *within* one run;
+this script gates the run against HISTORY — a fresh measurement whose
+wall times regressed more than the tolerance vs. the committed snapshot
+fails CI, so a kernel change that quietly doubles the fused level-build
+cannot land just because it is still faster than the staged pipeline.
+
+Rules per field:
+  * ``*_ms`` rows  — fail if fresh > (1 + tolerance) * baseline. Faster is
+    always fine (the snapshot is refreshed by the same CI run that
+    measures it, so improvements ratchet in).
+  * ``smoke_geometry`` — must match exactly: times from a different
+    geometry are not comparable, and a silent geometry drift is exactly
+    the kind of apples-to-oranges diff this gate exists to catch.
+  * ``parity_ok`` — must be true in the fresh run.
+  * other numeric fields (speedup, flop ratios) — informational only.
+
+Usage:
+    python -m benchmarks.check_bench --baseline BENCH_gbdt.json \
+        --fresh experiments/BENCH_gbdt_fresh.json [--max-regression 0.25]
+    python -m benchmarks.check_bench --selftest
+
+The default tolerance is deliberately loose (25%): shared CI runners
+jitter by tens of percent, and a gate that cries wolf gets deleted. A
+real kernel regression (a lost fusion, an accidental O(N^2) path) shows
+up as 2-10x, far outside any runner noise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def compare(baseline: dict, fresh: dict, max_regression: float) -> list[str]:
+    """Return a list of human-readable failures (empty = gate passes)."""
+    failures: list[str] = []
+    base_geo = baseline.get("smoke_geometry")
+    fresh_geo = fresh.get("smoke_geometry")
+    if base_geo != fresh_geo:
+        failures.append(
+            f"smoke_geometry changed: baseline {base_geo} vs fresh "
+            f"{fresh_geo} — times are not comparable; if the geometry "
+            "change is intentional, commit the fresh snapshot"
+        )
+        return failures  # comparing times across geometries is meaningless
+    if not fresh.get("parity_ok", False):
+        failures.append("fresh run has parity_ok != true (kernel mismatch)")
+    for key, base_val in baseline.items():
+        if not key.endswith("_ms"):
+            continue
+        fresh_val = fresh.get(key)
+        if not isinstance(fresh_val, (int, float)):
+            failures.append(f"{key}: missing from the fresh run")
+            continue
+        limit = (1.0 + max_regression) * float(base_val)
+        if float(fresh_val) > limit:
+            failures.append(
+                f"{key}: {fresh_val:.2f}ms vs baseline {base_val:.2f}ms "
+                f"(+{100 * (fresh_val / base_val - 1):.0f}%, limit "
+                f"+{100 * max_regression:.0f}%)"
+            )
+    return failures
+
+
+def selftest(max_regression: float) -> int:
+    """Prove the gate trips: inject a synthetic 1.5x regression into a
+    copy of the committed snapshot and assert compare() rejects it, and
+    that the unmodified snapshot passes against itself."""
+    baseline = json.loads(
+        (pathlib.Path(__file__).resolve().parents[1] / "BENCH_gbdt.json")
+        .read_text()
+    )
+    clean = compare(baseline, baseline, max_regression)
+    if clean:
+        print(f"selftest FAILED: snapshot does not pass vs itself: {clean}")
+        return 1
+    slow = dict(baseline)
+    for key, val in baseline.items():
+        if key.endswith("_ms"):
+            slow[key] = 1.5 * float(val)
+    tripped = compare(baseline, slow, max_regression)
+    if not tripped:
+        print("selftest FAILED: a 1.5x wall-time regression passed the gate")
+        return 1
+    geo = dict(baseline)
+    geo["smoke_geometry"] = dict(baseline["smoke_geometry"], n=1)
+    if not compare(baseline, geo, max_regression):
+        print("selftest FAILED: a geometry mismatch passed the gate")
+        return 1
+    print(f"selftest ok: injected +50% regression trips "
+          f"({len(tripped)} rows), geometry drift trips, clean diff passes")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_gbdt.json",
+                    help="committed snapshot to gate against")
+    ap.add_argument("--fresh", default="experiments/BENCH_gbdt_fresh.json",
+                    help="freshly measured snapshot (same schema)")
+    ap.add_argument("--max-regression", type=float, default=0.25,
+                    help="allowed fractional wall-time growth per _ms row")
+    ap.add_argument("--selftest", action="store_true",
+                    help="verify the gate trips on an injected regression")
+    args = ap.parse_args()
+    if args.selftest:
+        return selftest(args.max_regression)
+    baseline = json.loads(pathlib.Path(args.baseline).read_text())
+    fresh = json.loads(pathlib.Path(args.fresh).read_text())
+    failures = compare(baseline, fresh, args.max_regression)
+    if failures:
+        print("bench regression gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    ms = {k: f"{fresh[k]:.1f}ms" for k in fresh if k.endswith("_ms")}
+    print(f"bench regression gate ok (<= +{100 * args.max_regression:.0f}% "
+          f"vs baseline): {ms}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

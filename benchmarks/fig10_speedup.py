@@ -151,6 +151,51 @@ def measure_runtime_threads(
     return rows
 
 
+def measure_sharded_pulls(cfg, data, n_trees: int) -> dict:
+    """EXECUTED pull-byte reduction from sharding the server leaf table.
+
+    Runs the threaded runtime at W=4 with the leaf table split into P
+    partitions for a sweep of P; each worker derives its Bernoulli sample
+    from the ticket key and pulls only the partitions its sampled rows
+    touch, and the trace records the bytes each pull actually moved
+    (request bitmap + touched-partition payload). Reported per P: the mean
+    realized pull bytes, the reduction vs. the full 4*N*K pull, and the
+    Eq.-13-style simulated speedup with t_comm rescaled to the reduced
+    payload — what the saved bytes are worth on the paper's 1 GbE wire.
+    """
+    from repro.ps import AsyncRuntime
+
+    rt_cfg = cfg._replace(n_trees=n_trees)
+    n = data.n_samples
+    full = 4 * cfg.obj.n_outputs * n
+    sweep = sorted({min(16, n), min(256, n), n})
+    out = {"n_parts": [], "pull_bytes_mean": [], "reduction": [],
+           "sim_speedup_32w": [], "full_pull_bytes": full}
+    comp = measure_components(cfg, data)
+    base = simulate_async(
+        ClusterSpec(n_workers=1, t_build=comp["t_build"],
+                    t_comm=comp["t_comm"], t_server=comp["t_server"]),
+        n_trees,
+    ).makespan
+    for p in sweep:
+        _, trace = AsyncRuntime(
+            rt_cfg, data, n_workers=4, shard_pulls=p
+        ).run(seed=0)
+        mean_bytes = float(trace.pull_bytes.mean())
+        reduction = 1.0 - mean_bytes / full
+        t_comm = (comp["tree_bytes"] + mean_bytes) / GBE_BYTES_PER_S
+        sharded = simulate_async(
+            ClusterSpec(n_workers=32, t_build=comp["t_build"],
+                        t_comm=t_comm, t_server=comp["t_server"]),
+            n_trees,
+        ).makespan
+        out["n_parts"].append(p)
+        out["pull_bytes_mean"].append(mean_bytes)
+        out["reduction"].append(reduction)
+        out["sim_speedup_32w"].append(base / sharded)
+    return out
+
+
 def _objective_dataset(objective: str, quick: bool):
     """(tag, data) for a requested --objective override — the launch
     driver's shared objective -> workload dispatch, benchmark-sized."""
@@ -233,6 +278,15 @@ def run(quick: bool = True, objective: str | None = None) -> dict:
               f"{rt['mean_staleness'][-1]:.1f} realized vs "
               f"{rt['sim_mean_staleness'][-1]:.1f} simulated "
               f"(trace -> {rt['trace_json']})", flush=True)
+        if cfg.obj.rowwise:
+            rows["sharded_pulls"] = measure_sharded_pulls(
+                cfg, data, n_trees=24 if quick else 64
+            )
+            sp = rows["sharded_pulls"]
+            print(f"  {tag} sharded pulls: " + "  ".join(
+                f"P={p}: -{100 * r:.0f}% bytes"
+                for p, r in zip(sp["n_parts"], sp["reduction"])
+            ), flush=True)
         rows["sync_model"] = speedup_model_sync(
             warr, comp["t_build"], comp["t_comm"], comp["t_server"]
         ).tolist()

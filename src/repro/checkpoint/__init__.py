@@ -2,15 +2,19 @@
 from repro.checkpoint.store import (
     CheckpointManager,
     latest_step,
+    leaf_manifest,
     restore_pytree,
     save_pytree,
     step_dir,
+    steps,
 )
 
 __all__ = [
     "CheckpointManager",
     "latest_step",
+    "leaf_manifest",
     "restore_pytree",
     "save_pytree",
     "step_dir",
+    "steps",
 ]

@@ -131,14 +131,35 @@ def step_dir(root: str | pathlib.Path, step: int) -> pathlib.Path:
     return canonical  # missing either way; let the caller raise naturally
 
 
-def latest_step(root: str | pathlib.Path) -> int | None:
+def steps(root: str | pathlib.Path) -> list[int]:
+    """All complete checkpoint steps under ``root``, ascending. A crash-
+    resume caller picks the newest step <= its trace-prefix length from
+    this list; ``latest_step`` is the tail."""
     root = pathlib.Path(root)
     if not root.exists():
-        return None
-    steps = [
+        return []
+    return [
         s for s, p in _step_entries(root) if (p / "manifest.json").exists()
     ]
-    return steps[-1] if steps else None
+
+
+def latest_step(root: str | pathlib.Path) -> int | None:
+    all_steps = steps(root)
+    return all_steps[-1] if all_steps else None
+
+
+def leaf_manifest(root: str | pathlib.Path, step: int) -> dict[str, dict]:
+    """The manifest's leaf entries keyed by tree path — shapes and dtypes
+    WITHOUT loading any array data.
+
+    Restoring through ``restore_pytree`` needs a ``like`` tree with exact
+    leaf shapes; checkpoints that carry variable-size leaves (the elastic
+    runtime's in-flight version stash: (V, N) with V = live stale
+    versions) read V from here first and build ``like`` to match.
+    """
+    d = step_dir(root, step)
+    manifest = json.loads((d / "manifest.json").read_text())
+    return {e["path"]: e for e in manifest["leaves"]}
 
 
 @dataclasses.dataclass

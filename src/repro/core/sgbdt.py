@@ -38,6 +38,14 @@ class SGBDTConfig(NamedTuple):
     # First-class objective: an Objective instance or a registry spec
     # string ("multiclass:3", "quantile:0.9", "lambdarank", ...).
     objective: Objective | str | None = None
+    # Staleness-adaptive step length (Keuper & Pfreundt's async-SGD rule /
+    # Prop. 1's deflation): > 0 enables scaling each fold's effective step
+    # by 1 / (1 + 6 * adaptive_step * tau_j), with tau_j = j - k(j) the
+    # staleness OBSERVED at fold time. 0.0 (default) keeps the fixed step.
+    # The scale is applied by the server (``engine.scale_push``): staleness
+    # is unknowable at build time. tau = 0 scales by exactly 1.0, so serial
+    # training is bitwise-unchanged by the flag.
+    adaptive_step: float = 0.0
 
     @property
     def obj(self) -> Objective:

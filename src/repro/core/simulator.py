@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+from typing import Sequence
 
 import numpy as np
 
@@ -105,8 +106,127 @@ def staleness_stats(schedule) -> dict:
     }
 
 
+def step_scale_stats(schedule, rho: float) -> dict:
+    """Effective-step statistics of the adaptive rule on a k(j).
+
+    The staleness-adaptive server deflates fold j's step by
+    1 / (1 + 6*rho*tau_j); this summarizes the realized effective step a
+    schedule implies — the quantity cross-validated between a threaded
+    run's trace and the event model's predicted schedule for the same
+    cluster geometry (``crossvalidate_schedule(..., adaptive_rho=...)``).
+    """
+    from repro.ps.schedules import staleness_scales
+
+    scales = staleness_scales(schedule, rho)
+    return {
+        "rho": float(rho),
+        "mean_scale": float(scales.mean()),
+        "min_scale": float(scales.min()),
+    }
+
+
+def simulate_elastic(
+    spec: ClusterSpec,
+    n_trees: int,
+    membership: "Sequence[tuple[int, int]]" = (),
+) -> SimResult:
+    """``simulate_async`` with worker churn: the event model of the elastic
+    runtime.
+
+    ``membership`` is a sequence of ``(at_update, delta)`` pairs: when the
+    server has folded ``at_update`` trees, ``delta`` workers join (> 0, new
+    worker ids with freshly drawn speeds) or leave (< 0, the most recently
+    added live workers stop pulling new work; their in-flight build is
+    discarded — crash semantics, matching ``ps.runtime.FaultPlan``).
+    Predicts the staleness distribution of a join/leave/crash run so a
+    recorded elastic trace has a model to cross-validate against.
+    """
+    rng = np.random.default_rng(spec.seed)
+    membership = sorted((int(j), int(d)) for j, d in membership)
+    if any(j < 0 for j, _ in membership):
+        raise ValueError("membership events need at_update >= 0")
+
+    def draw_speed():
+        return float(np.exp(rng.normal(0.0, spec.speed_spread)))
+
+    def cycle(mean_scale: float) -> float:
+        pull = _lognormal(rng, spec.t_comm / 2, spec.comm_cv)
+        build = _lognormal(rng, spec.t_build, spec.build_cv) * mean_scale
+        push = _lognormal(rng, spec.t_comm / 2, spec.comm_cv)
+        return pull + build + push
+
+    events: list[tuple[float, int, int, int]] = []
+    seq = 0
+    speed: dict[int, float] = {}
+    live: list[int] = []
+    next_worker = 0
+    for _ in range(spec.n_workers):
+        w = next_worker
+        next_worker += 1
+        speed[w] = draw_speed()
+        live.append(w)
+        heapq.heappush(events, (cycle(speed[w]), seq, w, 0))
+        seq += 1
+
+    schedule = np.zeros(n_trees, np.int32)
+    server_free = 0.0
+    server_busy = 0.0
+    j = 0
+    mi = 0
+    while j < n_trees:
+        if not events:
+            raise RuntimeError(
+                "no live workers left before the run finished — membership "
+                "events removed everyone"
+            )
+        t_arrive, _, w, pulled_version = heapq.heappop(events)
+        if w not in live:  # crashed while building: push discarded
+            continue
+        start = max(t_arrive, server_free)
+        t_srv = _lognormal(rng, spec.t_server, spec.build_cv)
+        server_free = start + t_srv
+        server_busy += t_srv
+        schedule[j] = pulled_version
+        j += 1
+        while mi < len(membership) and membership[mi][0] <= j:
+            _, delta = membership[mi]
+            mi += 1
+            if delta > 0:
+                for _ in range(delta):
+                    nw = next_worker
+                    next_worker += 1
+                    speed[nw] = draw_speed()
+                    live.append(nw)
+                    heapq.heappush(
+                        events, (server_free + cycle(speed[nw]), seq, nw, j)
+                    )
+                    seq += 1
+            else:
+                for _ in range(-delta):
+                    if live:
+                        live.pop()
+        if w in live:  # pull fresh version, start next build
+            heapq.heappush(
+                events, (server_free + cycle(speed[w]), seq, w, j)
+            )
+            seq += 1
+
+    stale = np.arange(n_trees) - schedule
+    return SimResult(
+        schedule=schedule,
+        makespan=server_free,
+        mean_staleness=float(stale.mean()),
+        max_staleness=int(stale.max()),
+        server_busy_frac=server_busy / max(server_free, 1e-12),
+    )
+
+
 def crossvalidate_schedule(
-    schedule, spec: ClusterSpec, makespan: float | None = None
+    schedule,
+    spec: ClusterSpec,
+    makespan: float | None = None,
+    membership: Sequence[tuple[int, int]] = (),
+    adaptive_rho: float = 0.0,
 ) -> dict:
     """Validate the event model against a *measured* run.
 
@@ -115,15 +235,27 @@ def crossvalidate_schedule(
     simulator predicts a schedule for that geometry and both staleness
     distributions are reported side by side — the same shape of check
     Block-distributed GBT runs between its communication model and real
-    cluster traces.
+    cluster traces. ``membership`` forwards the run's worker churn to
+    ``simulate_elastic``; ``adaptive_rho > 0`` adds realized-vs-predicted
+    effective-step statistics under the staleness-adaptive rule.
     """
-    sim = simulate_async(spec, len(np.asarray(schedule)))
+    n = len(np.asarray(schedule))
+    sim = (
+        simulate_elastic(spec, n, membership)
+        if membership
+        else simulate_async(spec, n)
+    )
     out = {
         "spec": dataclasses.asdict(spec),
         "realized": staleness_stats(schedule),
         "simulated": staleness_stats(sim.schedule),
         "simulated_makespan": float(sim.makespan),
     }
+    if adaptive_rho:
+        out["realized_step_scale"] = step_scale_stats(schedule, adaptive_rho)
+        out["simulated_step_scale"] = step_scale_stats(
+            sim.schedule, adaptive_rho
+        )
     if makespan is not None:
         out["realized_makespan"] = float(makespan)
         out["makespan_ratio"] = float(makespan) / max(float(sim.makespan), 1e-12)

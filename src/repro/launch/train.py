@@ -134,15 +134,49 @@ def run_gbdt(args) -> None:
 
 
 def run_gbdt_threads(args, cfg, data, obj) -> None:
-    """The real host-async PS runtime: threads, recorded k(j), optional
-    bitwise replay verification."""
+    """The real host-async PS runtime: threads, recorded k(j), elastic
+    membership faults, sharded pulls, checkpoints, and bitwise
+    replay/resume verification."""
     from repro.core.sgbdt import train_loss
-    from repro.ps import AsyncRuntime
+    from repro.ps import AsyncRuntime, FaultPlan, RunTrace
 
-    rt = AsyncRuntime(cfg, data, n_workers=args.workers)
+    join_at = {}
+    for spec in args.join or ():
+        w, _, at = spec.partition(":")
+        join_at[int(w)] = int(at)
+    faults = FaultPlan(
+        crash_tickets=frozenset(args.crash_ticket or ()),
+        leave_tickets=frozenset(args.leave_ticket or ()),
+        join_at=join_at,
+    )
+    if args.adaptive_step:
+        cfg = cfg._replace(adaptive_step=args.adaptive_step)
+    rt = AsyncRuntime(
+        cfg, data, n_workers=args.workers,
+        faults=faults, shard_pulls=args.shard_pulls,
+    )
     print(f"gbdt[{obj.name}, K={obj.n_outputs}]: {cfg.n_trees} rounds, "
           f"{args.workers} REAL worker threads (host-async runtime)")
-    state, trace = rt.run(seed=args.seed)
+    run_kw = dict(
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+        halt_at_fold=args.halt_at_fold,
+        trace_path=args.trace_out,
+    )
+    if args.checkpoint_every and not args.checkpoint_dir:
+        raise SystemExit("--checkpoint-every needs --checkpoint-dir")
+    if args.resume_from:
+        if not args.checkpoint_dir:
+            raise SystemExit("--resume-from needs --checkpoint-dir")
+        prefix = RunTrace.load(args.resume_from)
+        print(f"resuming from trace prefix {args.resume_from} "
+              f"({prefix.n_trees}/{cfg.n_trees} folds) + checkpoints under "
+              f"{args.checkpoint_dir}")
+        state, trace = rt.resume(prefix, args.checkpoint_dir, **{
+            k: v for k, v in run_kw.items() if k != "checkpoint_dir"
+        })
+    else:
+        state, trace = rt.run(seed=args.seed, **run_kw)
     s = trace.summary()
     print(f"makespan {s['makespan_s']:.2f}s  "
           f"staleness mean {s['mean_staleness']:.2f} max {s['max_staleness']}  "
@@ -150,13 +184,46 @@ def run_gbdt_threads(args, cfg, data, obj) -> None:
           f"queue {s['t_queue_mean_s']*1e3:.1f}ms "
           f"fold {s['t_fold_mean_s']*1e3:.1f}ms")
     print(f"staleness histogram: {trace.staleness_histogram()}")
+    if trace.events:
+        print(f"membership events ({trace.n_epochs} epochs):")
+        for e in trace.events:
+            print(f"  fold {e['fold']:4d}: {e['kind']} worker {e['worker']}"
+                  + (f" (ticket {e['ticket']})" if e["ticket"] >= 0 else ""))
+    if trace.n_parts:
+        print(f"sharded pulls (P={trace.n_parts}): "
+              f"{s['pull_bytes_mean']:.0f} B/pull vs {s['pull_bytes_full']} B "
+              f"full ({100 * s['pull_reduction']:.1f}% reduction)")
+    if trace.adaptive_rho:
+        print(f"adaptive step (rho={trace.adaptive_rho}): mean scale "
+              f"{s['step_scale_mean']:.4f}")
     loss = float(train_loss(cfg, data, state))
     print(f"final train loss {loss:.4f}")
     assert np.isfinite(loss), "training diverged"
     if args.trace_out:
         path = trace.save(args.trace_out)
         print(f"trace -> {path}")
-    if args.verify_replay:
+    if args.halt_at_fold is not None:
+        print(f"halted at fold {args.halt_at_fold} (simulated crash); "
+              f"resume with --resume-from {args.trace_out or '<trace>'}")
+        if args.verify_replay:
+            raise SystemExit(
+                "--verify-replay needs a complete run; a halted prefix "
+                "replays only via --resume-from or --verify-resume"
+            )
+    if args.verify_resume:
+        if not args.checkpoint_dir:
+            raise SystemExit("--verify-resume needs --checkpoint-dir")
+        st_ckpt = rt.replay_from_checkpoint(args.checkpoint_dir, trace)
+        identical = (
+            np.array_equal(np.asarray(state.f), np.asarray(st_ckpt.f))
+            and np.array_equal(
+                np.asarray(state.forest.leaf_value),
+                np.asarray(st_ckpt.forest.leaf_value),
+            )
+        )
+        print(f"checkpoint + trace-suffix replay identical: {identical}")
+        assert identical, "crash-resume replay drifted from the live run"
+    if args.verify_replay and args.halt_at_fold is None:
         st_replay, _ = rt.replay(trace)
         identical = (
             np.array_equal(np.asarray(state.f), np.asarray(st_replay.f))
@@ -211,6 +278,39 @@ def main() -> None:
                     help="replay the recorded trace through the "
                          "deterministic engine and assert the forests are "
                          "bit-identical (--runtime threads)")
+    ap.add_argument("--crash-ticket", type=int, action="append",
+                    help="crash the worker that first draws this build "
+                         "ticket (repeatable; the ticket is re-issued)")
+    ap.add_argument("--leave-ticket", type=int, action="append",
+                    help="worker gracefully leaves after building this "
+                         "ticket (repeatable)")
+    ap.add_argument("--join", action="append", metavar="W:J",
+                    help="worker W (re)joins when the server reaches fold "
+                         "count J (repeatable)")
+    ap.add_argument("--shard-pulls", type=int, default=0, metavar="P",
+                    help="shard the server leaf table into P partitions; "
+                         "workers pull only partitions their sample "
+                         "touches (rowwise objectives only)")
+    ap.add_argument("--adaptive-step", type=float, default=0.0,
+                    metavar="RHO",
+                    help="staleness-adaptive server fold: scale each fold "
+                         "by 1/(1 + 6*RHO*tau) with tau the observed "
+                         "staleness")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="runtime checkpoint directory (--runtime threads)")
+    ap.add_argument("--checkpoint-every", type=int, default=0, metavar="K",
+                    help="checkpoint the server + in-flight versions every "
+                         "K folds")
+    ap.add_argument("--halt-at-fold", type=int, default=None, metavar="J",
+                    help="simulate a whole-process crash: stop the server "
+                         "after J folds and write the prefix trace")
+    ap.add_argument("--resume-from", default=None, metavar="TRACE",
+                    help="resume a halted run from its prefix trace JSON + "
+                         "--checkpoint-dir; unfolded tickets are re-issued")
+    ap.add_argument("--verify-resume", action="store_true",
+                    help="after the run, rebuild the final state from the "
+                         "newest checkpoint + trace suffix and assert it "
+                         "matches bitwise")
     ap.add_argument("--hist-mode", choices=("subtract", "rebuild"),
                     default="subtract", dest="hist_mode",
                     help="GBDT level-histogram strategy: 'subtract' derives "

@@ -42,6 +42,13 @@ class Objective:
     exact_gradient: bool = True
     # grad_hess[1] is exactly the diagonal of d2 loss_sum / dF2 (a.e.).
     exact_hessian: bool = True
+    # Sample i's (grad, hess) depend ONLY on (y_i, f_i). Rowwise objectives
+    # are what make partition-granular leaf-table pulls sound: a worker that
+    # zero-fills F rows outside its pulled partitions still computes the
+    # exact weighted gradient for every sampled row (unsampled rows carry
+    # m' = 0 and are inert in the tree build). Listwise objectives
+    # (LambdaRank) mix rows within a query group and must pull full tables.
+    rowwise: bool = True
 
     @property
     def n_outputs(self) -> int:

@@ -32,6 +32,7 @@ class LambdaRank(Objective):
     sigma: float = 1.0
     ndcg_weight: bool = True
     name = "lambdarank"
+    rowwise = False  # pair gradients mix rows within a query group
 
     def _pair_weights(self, y, f, qid):
         if qid is None:

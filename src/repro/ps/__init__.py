@@ -19,14 +19,17 @@ from repro.ps.engine import (
     get_trainer,
     propose_tree,
     round_body,
+    scale_push,
     server_fold,
+    staleness_scale,
     train,
 )
-from repro.ps.runtime import AsyncRuntime, RunTrace, replay_trace
+from repro.ps.runtime import AsyncRuntime, FaultPlan, RunTrace, replay_trace
 from repro.ps.schedules import (
     constant_delay,
     max_staleness,
     resolve_schedule,
+    staleness_scales,
     worker_round_robin,
 )
 from repro.ps.sharded import build_histogram_sharded, make_sharded_builder
@@ -34,6 +37,7 @@ from repro.ps.worker import build_trees_batched, train_worker_parallel
 
 __all__ = [
     "AsyncRuntime",
+    "FaultPlan",
     "RunTrace",
     "replay_trace",
     "Trainer",
@@ -41,11 +45,14 @@ __all__ = [
     "get_trainer",
     "propose_tree",
     "round_body",
+    "scale_push",
     "server_fold",
+    "staleness_scale",
     "train",
     "constant_delay",
     "max_staleness",
     "resolve_schedule",
+    "staleness_scales",
     "worker_round_robin",
     "build_histogram_sharded",
     "make_sharded_builder",

@@ -124,7 +124,43 @@ def server_fold(cfg, forest, f_live, tree, delta):
     return forest_push(forest, tree, jnp.float32(1.0)), f_live + delta
 
 
-def round_body(cfg, data, forest, f_live, f_target, rng, builder=None):
+def staleness_scale(rho: float, staleness) -> jax.Array:
+    """Prop.-1 step deflation for a tau-stale push: 1 / (1 + 6*rho*tau).
+
+    The jnp twin of ``optim.staleness_step_scale`` (quadratic term dropped
+    — the high-diversity regime), usable on traced staleness values so the
+    fused scan replay computes the identical f32 scale the threaded server
+    computed from (j, k(j)) at fold time.
+    """
+    # 6*rho folds in python f64 and rounds ONCE, exactly like the host twin
+    # ``schedules.staleness_scales`` — trace-reported scales match bitwise.
+    tau = jnp.asarray(staleness, jnp.float32)
+    coef = jnp.float32(6.0 * rho)
+    return (jnp.float32(1.0) / (jnp.float32(1.0) + coef * tau)).astype(
+        jnp.float32
+    )
+
+
+def scale_push(cfg, data, tree, scale):
+    """Server-side staleness-adaptive deflation of a pushed tree.
+
+    Scales the LEAF TABLE and re-derives the delta by re-applying the
+    scaled tree to the training bins — mul-then-GATHER-then-add, never a
+    mul feeding the fold's add, for the same FMA-contraction reason
+    ``propose_tree`` pre-scales by v: ``s * delta`` next to ``f + delta``
+    contracts in some programs and not others, while a gathered operand
+    cannot contract and ``round(s*leaf)[idx] == round(s*leaf[idx])``. The
+    pushed delta is discarded (in a real PS the adaptive server would not
+    request it: the tree alone determines the update).
+    """
+    tree = tree._replace(leaf_value=scale * tree.leaf_value)
+    if cfg.obj.n_outputs == 1:
+        return tree, apply_tree(tree, data.bins)
+    return tree, apply_tree_stack(tree, data.bins)
+
+
+def round_body(cfg, data, forest, f_live, f_target, rng, builder=None,
+               staleness=None):
     """One boosting round. Splitting ``f_target`` from ``f_live`` is what
     makes this body shared between every trainer: the tree is built against
     (possibly stale) ``f_target`` but folded into the live server state.
@@ -133,9 +169,17 @@ def round_body(cfg, data, forest, f_live, f_target, rng, builder=None):
     (``ps.runtime``) compiles ``propose_tree`` and ``server_fold`` as two
     separate programs, so the fused forms must not let XLA optimize across
     that boundary or record-and-replay would drift by compilation form.
+
+    ``staleness`` is tau_j = j - k(j), known only at FOLD time (the fold
+    order j is decided by the race, not the builder) — so the adaptive
+    deflation lives on the server side of the barrier, exactly where the
+    threaded runtime's fold program applies it.
     """
     tree, delta = propose_tree(cfg, data, f_target, rng, builder)
     tree, delta = jax.lax.optimization_barrier((tree, delta))
+    if cfg.adaptive_step and staleness is not None:
+        scale = staleness_scale(cfg.adaptive_step, staleness)
+        tree, delta = scale_push(cfg, data, tree, scale)
     return server_fold(cfg, forest, f_live, tree, delta)
 
 
@@ -181,7 +225,10 @@ class Trainer:
             forest, f, ring = carry
             j, k_j, rng = xs
             f_target = ring[k_j % ring_size]
-            forest, f = round_body(cfg, data, forest, f, f_target, rng, builder)
+            staleness = (j - k_j) if cfg.adaptive_step else None
+            forest, f = round_body(
+                cfg, data, forest, f, f_target, rng, builder, staleness
+            )
             ring = jax.lax.dynamic_update_index_in_dim(
                 ring, f, (j + 1) % ring_size, 0
             )

@@ -40,6 +40,18 @@ def max_staleness(schedule: np.ndarray) -> int:
     return int(np.max(np.arange(len(schedule)) - schedule))
 
 
+def staleness_scales(schedule, rho: float) -> np.ndarray:
+    """Per-update adaptive step scales 1 / (1 + 6*rho*tau_j) for a realized
+    k(j) — the host twin of ``engine.staleness_scale`` (same rule in f32,
+    so trace reporting matches what the jitted fold computed). ``rho = 0``
+    is the fixed-step identity (all ones)."""
+    schedule = np.asarray(schedule)
+    tau = (np.arange(len(schedule)) - schedule).astype(np.float32)
+    return (
+        np.float32(1.0) / (np.float32(1.0) + np.float32(6.0 * rho) * tau)
+    ).astype(np.float32)
+
+
 def resolve_schedule(spec, n_trees: int) -> np.ndarray:
     """Normalize any schedule provider to a validated (n_trees,) int32 k(j).
 

@@ -125,3 +125,29 @@ def test_foreign_step_entries_tolerated(tmp_path):
     numeric = [n for n in kept if n[5:].isdigit()]
     assert numeric == ["step_000008", "step_7"]
     assert latest_step(tmp_path) == 8
+
+
+def test_steps_and_leaf_manifest(tmp_path):
+    """The crash-resume loaders: ``steps`` lists only COMPLETE checkpoints
+    ascending (a torn write without a manifest is invisible), and
+    ``leaf_manifest`` exposes shapes/dtypes so a resume can size its
+    ``like`` tree for variable-size leaves before loading any data."""
+    from repro.checkpoint import leaf_manifest, steps
+
+    assert steps(tmp_path / "nowhere") == []
+    tree = {"f": np.zeros(16, np.float32),
+            "held_f": np.zeros((3, 16), np.float32)}
+    for s in (12, 4, 20):
+        save_pytree(tmp_path, s, tree)
+    # a torn checkpoint: directory exists, manifest missing
+    (tmp_path / "step_000009").mkdir()
+    assert steps(tmp_path) == [4, 12, 20]
+
+    manifest = leaf_manifest(tmp_path, 12)
+    held = next(e for p, e in manifest.items() if "held_f" in p)
+    assert held["shape"] == [3, 16] and held["dtype"] == "float32"
+    # the resume pattern: build `like` from the manifest, restore exactly
+    like = {"f": np.zeros(16, np.float32),
+            "held_f": np.zeros(tuple(held["shape"]), np.float32)}
+    restored = restore_pytree(tmp_path, 12, like)
+    assert np.asarray(restored["held_f"]).shape == (3, 16)

@@ -257,3 +257,38 @@ def test_trainer_cache_lru_bounded():
     assert cfgs[-2] in _TRAINERS
     clear_trainers()
     assert len(_TRAINERS) == 0
+
+
+# ------------------------------------------------------- staleness-adaptive
+def test_adaptive_step_serial_is_bitwise_fixed(fast_cfg, sparse_data):
+    """tau = 0 everywhere => scale = 1/(1+6*rho*0) = exactly 1.0f, so the
+    adaptive trainer on a serial schedule must reproduce the fixed-step
+    forest bit for bit (the flag is free when there is no asynchrony)."""
+    fixed = Trainer(fast_cfg).train_scan(sparse_data, ("round_robin", 1), seed=0)[0]
+    adaptive = Trainer(fast_cfg._replace(adaptive_step=0.25)).train_scan(
+        sparse_data, ("round_robin", 1), seed=0
+    )[0]
+    assert _forests_identical(fixed.forest, adaptive.forest)
+    np.testing.assert_array_equal(np.asarray(fixed.f), np.asarray(adaptive.f))
+
+
+def test_adaptive_step_rescues_aggressive_step_under_staleness(sparse_data):
+    """The point of the 1/(1+6*rho*tau) rule: with an aggressive step and
+    deep staleness, fixed-step async diverges toward garbage while the
+    deflated step still converges. (At mild step lengths fixed wins — the
+    rule is a safety valve, not a free lunch — so the test pins the regime
+    the paper's Prop. 1 actually covers: step ~1, tau >> 1.)"""
+    cfg = SGBDTConfig(
+        n_trees=40, step_length=0.9, sampling_rate=0.8,
+        learner=LearnerConfig(depth=4, n_bins=64),
+    )
+    schedule = ("constant", 12)
+    fixed_state = Trainer(cfg).train_scan(sparse_data, schedule, seed=0)[0]
+    adaptive_state = Trainer(cfg._replace(adaptive_step=0.1)).train_scan(
+        sparse_data, schedule, seed=0
+    )[0]
+    fixed_loss = float(train_loss(cfg, sparse_data, fixed_state))
+    adaptive_loss = float(train_loss(cfg, sparse_data, adaptive_state))
+    assert adaptive_loss < fixed_loss * 0.75, (fixed_loss, adaptive_loss)
+    # and the deflated run is actually good, not just "less bad"
+    assert adaptive_loss < 0.45, adaptive_loss

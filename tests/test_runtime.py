@@ -11,6 +11,8 @@ The contracts under test:
   * trace JSON round-trips, and the simulator cross-validation helpers
     compare realized vs. predicted staleness for the measured geometry.
 """
+import json
+
 import numpy as np
 import pytest
 
@@ -185,3 +187,253 @@ def test_train_cli_threads_verify_replay(hist_mode, tmp_path):
     trace = RunTrace.load(trace_path)
     assert trace.n_trees == 6
     resolve_schedule(trace.schedule, 6)  # valid causal k(j)
+
+
+# ---------------------------------------------------- elastic + fault injection
+from repro.checkpoint import steps as ckpt_steps  # noqa: E402
+from repro.ps import FaultPlan  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def fault_run(rt_cfg, sparse_data):
+    """W=4 with a crash (ticket 5), a graceful leave (ticket 9), and a
+    rejoin at fold 10 — the canonical elastic run."""
+    plan = FaultPlan(crash_tickets={5}, leave_tickets={9}, join_at={7: 10})
+    rt = AsyncRuntime(rt_cfg, sparse_data, n_workers=4, faults=plan)
+    state, trace = rt.run(seed=0)
+    return rt, state, trace
+
+
+def test_fault_plan_validation(rt_cfg, sparse_data):
+    with pytest.raises(ValueError):
+        FaultPlan(crash_tickets={3}, leave_tickets={3})
+    with pytest.raises(ValueError):
+        FaultPlan(crash_tickets={-1})
+    with pytest.raises(ValueError):
+        FaultPlan(join_at={1: -2})
+    with pytest.raises(ValueError):  # join threshold past the end of the run
+        AsyncRuntime(
+            rt_cfg, sparse_data, n_workers=2,
+            faults=FaultPlan(join_at={5: rt_cfg.n_trees + 1}),
+        )
+
+
+def test_membership_events_recorded(rt_cfg, fault_run):
+    """The fault plan's effects are all in the trace: one crash at ticket 5,
+    one leave at ticket 9, one join of worker 7, each opening a new epoch."""
+    _, _, trace = fault_run
+    by_kind = {e["kind"]: e for e in trace.events}
+    assert set(by_kind) == {"crash", "leave", "join"}
+    assert by_kind["crash"]["ticket"] == 5
+    assert by_kind["leave"]["ticket"] == 9
+    assert by_kind["join"]["worker"] == 7 and by_kind["join"]["fold"] >= 10
+    assert trace.n_epochs == 4  # initial + one per event
+    assert trace.epoch.max() == 3 and trace.epoch.min() == 0
+    # the crashed ticket was re-issued: the permutation is still complete
+    assert sorted(trace.key_index.tolist()) == list(range(rt_cfg.n_trees))
+    assert (trace.key_index.tolist()).count(5) == 1
+    # the joined worker really worked
+    assert 7 in set(trace.worker.tolist())
+    assert trace.membership_deltas() == [
+        (by_kind["crash"]["fold"], -1),
+        (by_kind["leave"]["fold"], -1),
+        (by_kind["join"]["fold"], 1),
+    ]
+
+
+def test_elastic_trace_replays_bitwise(rt_cfg, sparse_data, fault_run):
+    """THE tentpole contract: membership churn only decides which worker
+    realizes each (k(j), ticket) row — the trace still replays exactly."""
+    _, state, trace = fault_run
+    st_replay, _ = replay_trace(rt_cfg, sparse_data, trace)
+    assert _forest_identical(state, st_replay)
+
+
+def test_fault_plan_is_deterministic(rt_cfg, sparse_data):
+    """Crash/leave key off ticket numbers, not timing: two runs under the
+    same plan produce the same membership event set (worker attribution of
+    the crash may differ — that is the race — but never what happened)."""
+    plan = FaultPlan(crash_tickets={2}, leave_tickets={6})
+    traces = []
+    for _ in range(2):
+        rt = AsyncRuntime(rt_cfg, sparse_data, n_workers=3, faults=plan)
+        _, trace = rt.run(seed=0)
+        traces.append(trace)
+    for t in traces:
+        assert [(e["kind"], e["ticket"]) for e in t.events] == [
+            ("crash", 2), ("leave", 6),
+        ]
+        assert sorted(t.key_index.tolist()) == list(range(rt_cfg.n_trees))
+
+
+def test_all_workers_dead_is_a_loud_error(rt_cfg, sparse_data):
+    """Killing every worker with no rejoin must raise, not hang."""
+    plan = FaultPlan(crash_tickets={0, 1})
+    rt = AsyncRuntime(rt_cfg, sparse_data, n_workers=2, faults=plan)
+    with pytest.raises(RuntimeError, match="no live workers"):
+        rt.run(seed=0)
+
+
+# ------------------------------------------------------------- trace schema v2
+def test_trace_v1_still_loads(tmp_path, threaded_run):
+    """Back-compat: a v1 trace (pre-elastic schema) loads with defaulted
+    v2 columns — one epoch, no events, unit step scales."""
+    _, _, trace = threaded_run
+    d = trace.to_json()
+    d["trace_version"] = 1
+    for v2_only in ("epoch", "pull_bytes", "step_scale", "events",
+                    "n_parts", "full_pull_bytes", "adaptive_rho"):
+        d.pop(v2_only)
+    path = tmp_path / "v1.json"
+    path.write_text(json.dumps(d))
+    back = RunTrace.load(path)
+    np.testing.assert_array_equal(back.schedule, trace.schedule)
+    assert back.events == () and back.n_epochs == 1
+    assert (back.step_scale == 1.0).all()
+    assert back.adaptive_rho == 0.0
+
+
+def test_trace_unknown_version_fails_loudly(tmp_path, threaded_run):
+    _, _, trace = threaded_run
+    d = trace.to_json()
+    d["trace_version"] = 99
+    path = tmp_path / "bad.json"
+    path.write_text(json.dumps(d))
+    with pytest.raises(ValueError, match="unknown RunTrace schema version"):
+        RunTrace.load(path)
+    d.pop("trace_version")
+    path.write_text(json.dumps(d))
+    with pytest.raises(ValueError, match="unknown RunTrace schema version"):
+        RunTrace.load(path)
+
+
+def test_trace_unknown_field_fails_loudly(tmp_path, threaded_run):
+    """A field no schema version defines is data the replay would silently
+    drop — refuse it for every version."""
+    _, _, trace = threaded_run
+    for version in (1, 2):
+        d = trace.to_json()
+        if version == 1:
+            for v2_only in ("epoch", "pull_bytes", "step_scale", "events",
+                            "n_parts", "full_pull_bytes", "adaptive_rho"):
+                d.pop(v2_only)
+        d["trace_version"] = version
+        d["mystery"] = 1
+        path = tmp_path / f"bad_{version}.json"
+        path.write_text(json.dumps(d))
+        with pytest.raises(ValueError, match="mystery"):
+            RunTrace.load(path)
+
+
+# ------------------------------------------------------------- sharded pulls
+def test_sharded_pulls_reduce_bytes_and_replay_bitwise(rt_cfg, sparse_data):
+    """Partition-granular pulls move measurably fewer bytes, and the run
+    still replays bitwise through the FULL-table deterministic engine —
+    the masked rows are exactly the m' = 0 rows, which are inert."""
+    n = sparse_data.n_samples
+    rt = AsyncRuntime(rt_cfg, sparse_data, n_workers=4, shard_pulls=n)
+    state, trace = rt.run(seed=0)
+    assert trace.n_parts == n
+    full = 4 * rt_cfg.obj.n_outputs * n
+    assert trace.full_pull_bytes == full
+    assert float(trace.pull_bytes.mean()) < full
+    assert trace.summary()["pull_reduction"] > 0.05
+    st_replay, _ = replay_trace(rt_cfg, sparse_data, trace)
+    assert _forest_identical(state, st_replay)
+
+
+def test_sharded_pulls_gated_to_rowwise_objectives():
+    """LambdaRank mixes rows within a query group: a worker cannot know
+    its gradient from a partial F, so sharded pulls must refuse it."""
+    import repro.data as D
+
+    data = D.make_ranking(8, 16, 40, seed=0)
+    cfg = SGBDTConfig(
+        n_trees=4, step_length=0.2, sampling_rate=0.9,
+        objective="lambdarank", learner=LearnerConfig(depth=3, n_bins=32),
+    )
+    with pytest.raises(ValueError, match="not rowwise"):
+        AsyncRuntime(cfg, data, n_workers=2, shard_pulls=4)
+
+
+def test_sharded_pulls_bounds(rt_cfg, sparse_data):
+    with pytest.raises(ValueError, match="shard_pulls"):
+        AsyncRuntime(rt_cfg, sparse_data, n_workers=2,
+                     shard_pulls=sparse_data.n_samples + 1)
+
+
+# ------------------------------------------------------------- crash-resume
+def test_halt_resume_replay_parity(rt_cfg, sparse_data, tmp_path):
+    """The crash-resume contract end to end: halt mid-run (simulated
+    process crash), resume from the on-disk trace prefix + checkpoints,
+    and require (a) the combined trace replays bitwise from scratch and
+    (b) the final state rebuilds bitwise from checkpoint + trace suffix."""
+    ck = tmp_path / "ck"
+    tr = tmp_path / "trace.json"
+    rt = AsyncRuntime(rt_cfg, sparse_data, n_workers=4)
+    _, prefix = rt.run(
+        seed=0, checkpoint_dir=ck, checkpoint_every=5,
+        halt_at_fold=13, trace_path=tr,
+    )
+    assert prefix.n_trees == 13
+    assert ckpt_steps(ck) == [5, 10, 13]
+    on_disk = RunTrace.load(tr)  # the crash leaves a loadable prefix
+    np.testing.assert_array_equal(on_disk.schedule, prefix.schedule)
+
+    rt2 = AsyncRuntime(rt_cfg, sparse_data, n_workers=4)
+    state, combined = rt2.resume(on_disk, ck)
+    assert combined.n_trees == rt_cfg.n_trees
+    # prefix rows are verbatim; the seam is a recorded resume event
+    np.testing.assert_array_equal(combined.schedule[:13], prefix.schedule)
+    np.testing.assert_array_equal(combined.key_index[:13], prefix.key_index)
+    assert combined.events[-1]["kind"] == "resume"
+    assert combined.events[-1]["fold"] == 13
+    # (a) deterministic replay of the combined trace
+    st_replay, _ = replay_trace(rt_cfg, sparse_data, combined)
+    assert _forest_identical(state, st_replay)
+    # (b) checkpoint + suffix replay (the 13-fold checkpoint serves the
+    # stale versions the in-flight builds held at the halt)
+    st_ckpt = rt2.replay_from_checkpoint(ck, combined)
+    assert _forest_identical(state, st_ckpt)
+
+
+def test_resume_reissues_lost_inflight_tickets(rt_cfg, sparse_data, tmp_path):
+    """Tickets in flight at the crash (issued, never folded) are exactly
+    the ones the resumed run re-issues — nothing lost, nothing doubled."""
+    ck = tmp_path / "ck"
+    rt = AsyncRuntime(rt_cfg, sparse_data, n_workers=4)
+    _, prefix = rt.run(
+        seed=0, checkpoint_dir=ck, checkpoint_every=6, halt_at_fold=9
+    )
+    folded = set(prefix.key_index.tolist())
+    rt2 = AsyncRuntime(rt_cfg, sparse_data, n_workers=2)  # elastic: W=4 -> 2
+    _, combined = rt2.resume(prefix, ck)
+    suffix = combined.key_index[9:].tolist()
+    assert sorted(suffix) == sorted(set(range(rt_cfg.n_trees)) - folded)
+    assert set(combined.worker[9:].tolist()) <= {0, 1}
+    # resume without a usable checkpoint fails loudly
+    with pytest.raises(ValueError, match="no checkpoint"):
+        rt2.resume(prefix, tmp_path / "empty")
+    # a complete trace has nothing to resume
+    with pytest.raises(ValueError, match="nothing to resume"):
+        rt2.resume(combined, ck)
+
+
+# ------------------------------------------------------------- adaptive step
+def test_adaptive_step_scales_recorded_and_replayed(rt_cfg, sparse_data):
+    """rho > 0: the server deflates each fold by 1/(1+6*rho*tau) at fold
+    time, the realized scales land in the trace, and the fused replay
+    computes the identical f32 scales — still bitwise."""
+    acfg = rt_cfg._replace(adaptive_step=0.05)
+    rt = AsyncRuntime(acfg, sparse_data, n_workers=4)
+    state, trace = rt.run(seed=0)
+    assert trace.adaptive_rho == 0.05
+    tau = trace.staleness.astype(np.float32)
+    expect = np.float32(1.0) / (np.float32(1.0) + np.float32(6.0 * 0.05) * tau)
+    np.testing.assert_array_equal(trace.step_scale, expect)
+    assert (trace.step_scale[tau > 0] < 1.0).all()
+    st_replay, _ = replay_trace(acfg, sparse_data, trace)
+    assert _forest_identical(state, st_replay)
+    # replaying under a different rho is refused: the folds would differ
+    with pytest.raises(ValueError, match="adaptive_rho"):
+        replay_trace(rt_cfg, sparse_data, trace)

@@ -89,3 +89,21 @@ def test_round_robin_steady_state_staleness():
     tail = np.arange(32)[8:] - sched[8:]
     assert (tail == 3).all()  # steady state: tau = W - 1
     assert max_staleness(sched) == 3
+
+
+def test_staleness_scales_closed_form():
+    """Host twin of the server's adaptive rule: serial schedules scale by
+    exactly 1.0; constant-delay schedules by exactly 1/(1+6*rho*tau) with
+    the same single f32 rounding of 6*rho the jnp side performs."""
+    from repro.ps.schedules import staleness_scales
+
+    serial = staleness_scales(np.arange(20), rho=0.3)
+    assert serial.dtype == np.float32
+    np.testing.assert_array_equal(serial, np.ones(20, np.float32))
+    sched = resolve_schedule(("constant", 4), 32)
+    scales = staleness_scales(sched, rho=0.1)
+    tau = (np.arange(32) - sched).astype(np.float32)
+    expect = np.float32(1.0) / (np.float32(1.0) + np.float32(0.6) * tau)
+    np.testing.assert_array_equal(scales, expect)
+    # max staleness 4 floors the scale near 1/(1+0.6*4), modulo f32 rounding
+    assert scales.min() == pytest.approx(1.0 / (1.0 + 0.6 * 4), rel=1e-6)

@@ -85,3 +85,62 @@ def test_dimboost_linear_comm_penalty():
     d_fast_net = speedup_model_dimboost(w, 1.0, 0.001, 0.01)
     d_slow_net = speedup_model_dimboost(w, 1.0, 0.05, 0.01)
     assert d_fast_net > d_slow_net * 2
+
+
+# ----------------------------------------------------------- elastic churn
+def test_simulate_elastic_no_churn_matches_async():
+    """No membership events: simulate_elastic degenerates to the same
+    process simulate_async models (same distributional knobs; identical
+    staleness scale)."""
+    from repro.core.simulator import simulate_elastic
+
+    spec = _spec(4)
+    plain = simulate_async(spec, 200)
+    elastic = simulate_elastic(spec, 200)
+    assert abs(elastic.mean_staleness - plain.mean_staleness) < 1.5
+    assert elastic.max_staleness <= 4 * plain.max_staleness + 2
+
+
+def test_simulate_elastic_leave_reduces_staleness():
+    """Workers leaving mid-run: fewer pullers racing the server, so the
+    post-event staleness drops — and a join brings it back up."""
+    from repro.core.simulator import simulate_elastic
+
+    spec = _spec(8)
+    shrink = simulate_elastic(spec, 400, membership=[(100, -6)])
+    tail = np.arange(400)[200:] - shrink.schedule[200:]
+    head = np.arange(400)[:100] - shrink.schedule[:100]
+    assert tail.mean() < head.mean()
+    grow = simulate_elastic(spec, 400, membership=[(100, -6), (200, 6)])
+    regrown = np.arange(400)[300:] - grow.schedule[300:]
+    assert regrown.mean() > tail.mean()
+
+
+def test_simulate_elastic_everyone_leaves_raises():
+    from repro.core.simulator import simulate_elastic
+
+    with pytest.raises(RuntimeError, match="no live workers"):
+        simulate_elastic(_spec(2), 400, membership=[(10, -2)])
+    with pytest.raises(ValueError):
+        simulate_elastic(_spec(2), 10, membership=[(-1, 1)])
+
+
+def test_step_scale_stats_and_elastic_crossvalidation():
+    """The elastic + adaptive arms of crossvalidate_schedule: membership
+    deltas route to simulate_elastic, adaptive_rho adds realized and
+    simulated effective-step summaries."""
+    from repro.core.simulator import crossvalidate_schedule, step_scale_stats
+
+    spec = _spec(4)
+    sim = simulate_async(spec, 120)
+    stats = step_scale_stats(sim.schedule, rho=0.1)
+    assert 0 < stats["min_scale"] <= stats["mean_scale"] <= 1.0
+    serial = step_scale_stats(np.arange(50), rho=0.1)
+    assert serial["mean_scale"] == 1.0  # tau = 0 everywhere
+    xval = crossvalidate_schedule(
+        sim.schedule, spec, makespan=sim.makespan,
+        membership=[(30, -1), (60, 1)], adaptive_rho=0.1,
+    )
+    assert "realized_step_scale" in xval and "simulated_step_scale" in xval
+    assert xval["realized_step_scale"]["mean_scale"] == stats["mean_scale"]
+    assert xval["simulated"]["max_staleness"] >= 0
