@@ -1,88 +1,36 @@
-"""Schema validation for ``src/repro/kernels/tuning_table.json``.
+"""Thin shim: tuning-table schema validation moved to ``repro.analysis``.
 
-The tuning table is data the kernel dispatcher trusts at import time: a
-malformed entry (a typo'd key, a string where a block size should be, a
-format bump nobody taught the loader about) turns into a confusing
-runtime failure deep inside a Pallas grid computation. This check runs in
-the lint job — stdlib only, no jax import — and fails fast with a
-field-level message instead.
+The validator now lives in ``repro.analysis.tuning_schema`` (stdlib-only,
+so the lint tier can still run it without jax), where the VMEM checker
+layers budget pricing on top. This wrapper keeps the historical entry
+point and exit-code contract:
 
-Usage:
     python -m benchmarks.check_tuning_table [path]
+
+For the full check (schema + VMEM budgets + BlockSpec placement), run
+``PYTHONPATH=src python -m repro.analysis --only vmem``.
 """
 from __future__ import annotations
 
 import json
 import pathlib
-import re
 import sys
 
-KEY_RE = re.compile(r"^N\d+_F\d+_B\d+_L\d+$")
-KNOWN_FORMATS = {1}
-# field -> (type, must be > 0)
-ENTRY_FIELDS = {
-    "sample_block": (int, True),
-    "feature_block": (int, True),
-    "node_block": (int, True),
-    "fused_ms": (float, True),
-    "split_ms": (float, True),
-    "host": (str, False),
-}
+_SRC = pathlib.Path(__file__).resolve().parents[1] / "src"
+if str(_SRC) not in sys.path:
+    sys.path.insert(0, str(_SRC))
 
-
-def validate(table: dict) -> list[str]:
-    errors: list[str] = []
-    fmt = table.get("format")
-    if fmt not in KNOWN_FORMATS:
-        errors.append(
-            f"format is {fmt!r}; this validator knows {sorted(KNOWN_FORMATS)}"
-            " — teach benchmarks.check_tuning_table (and the kernel loader)"
-            " the new format before committing it"
-        )
-        return errors
-    unknown_top = set(table) - {"format", "entries", "comment"}
-    if unknown_top:
-        errors.append(f"unknown top-level fields: {sorted(unknown_top)}")
-    entries = table.get("entries")
-    if not isinstance(entries, dict):
-        errors.append("'entries' must be an object")
-        return errors
-    for key, entry in entries.items():
-        if not KEY_RE.match(key):
-            errors.append(
-                f"entry key {key!r} does not match N<d>_F<d>_B<d>_L<d>"
-            )
-        if not isinstance(entry, dict):
-            errors.append(f"{key}: entry must be an object")
-            continue
-        for field, (typ, positive) in ENTRY_FIELDS.items():
-            val = entry.get(field)
-            if val is None:
-                errors.append(f"{key}: missing field {field!r}")
-            elif typ is float:
-                if isinstance(val, bool) or not isinstance(val, (int, float)):
-                    errors.append(f"{key}.{field}: {val!r} is not a number")
-                elif positive and val <= 0:
-                    errors.append(f"{key}.{field}: must be > 0, got {val}")
-            elif typ is int:
-                if isinstance(val, bool) or not isinstance(val, int):
-                    errors.append(f"{key}.{field}: {val!r} is not an int")
-                elif positive and val <= 0:
-                    errors.append(f"{key}.{field}: must be > 0, got {val}")
-            elif not isinstance(val, typ):
-                errors.append(f"{key}.{field}: {val!r} is not {typ.__name__}")
-        unknown = set(entry) - set(ENTRY_FIELDS)
-        if unknown:
-            errors.append(f"{key}: unknown fields {sorted(unknown)}")
-    return errors
+from repro.analysis.tuning_schema import (  # noqa: E402,F401 (re-exports)
+    ENTRY_FIELDS,
+    KEY_RE,
+    KNOWN_FORMATS,
+    default_table_path,
+    validate,
+)
 
 
 def main() -> int:
-    default = (
-        pathlib.Path(__file__).resolve().parents[1]
-        / "src" / "repro" / "kernels" / "tuning_table.json"
-    )
-    path = pathlib.Path(sys.argv[1]) if len(sys.argv) > 1 else default
+    path = pathlib.Path(sys.argv[1]) if len(sys.argv) > 1 else default_table_path()
     table = json.loads(path.read_text())
     errors = validate(table)
     if errors:

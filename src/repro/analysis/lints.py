@@ -1,0 +1,213 @@
+"""Checker 4: repo-invariant lints.
+
+Three rules that exist because each was once a real review comment:
+
+  hardcoded-interpret — ``interpret=True`` literals outside ``tests/``.
+      PR 4 made every kernel wrapper take ``interpret=None`` and
+      autodetect (interpret on CPU, compiled on TPU); a hardcoded
+      ``True`` in a benchmark or example silently benchmarks the Pallas
+      interpreter and reports numbers off by orders of magnitude.
+  prngkey-outside-ticket — ``jax.random.PRNGKey`` in library code outside
+      the ticket-key derivation sites (``ps/worker.py``, ``ps/runtime.py``,
+      ``ps/engine.py``). The record→replay contract keys every tree build
+      off the ticket's ``key_index``; a fresh PRNGKey minted anywhere
+      else produces randomness the trace cannot replay. ``launch/`` is a
+      CLI layer (seeds come from argv) and is exempt.
+  unknown-trace-field — ``rows["<field>"]`` subscripts in ``ps/runtime.py``
+      must name fields in the trace-v2 array schema. The whitelist is
+      read out of ``_ARRAYS_V1``/``_ARRAYS_V2`` in the file itself (AST,
+      no import), so extending the schema and using the new field is one
+      edit, but a typo'd row name — which would silently write to a
+      KeyError at runtime, or worse, a fresh dict entry the saver drops —
+      is flagged at lint time.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from repro.analysis.findings import Finding
+
+CHECKER = "lints"
+
+# Library roots scanned for interpret/PRNGKey; tests/ is exempt by
+# construction (corpus snippets and unit tests legitimately hardcode both).
+SCAN_ROOTS = ("src", "benchmarks", "examples")
+
+# The only files allowed to mint PRNGKeys: ticket-key derivation and the
+# engine's seed plumbing. Everything else must thread keys from tickets.
+PRNGKEY_ALLOWLIST = {
+    "src/repro/ps/engine.py",
+    "src/repro/ps/runtime.py",
+    "src/repro/ps/worker.py",
+}
+# CLI drivers: seeds arrive via argv, not via the replay contract.
+PRNGKEY_EXEMPT_DIRS = ("src/repro/launch/",)
+
+RUNTIME_FILE = "src/repro/ps/runtime.py"
+TRACE_SCHEMA_NAMES = ("_ARRAYS_V1", "_ARRAYS_V2")
+
+
+def _iter_py(root: pathlib.Path):
+    for scan in SCAN_ROOTS:
+        base = root / scan
+        if not base.is_dir():
+            continue
+        for p in sorted(base.rglob("*.py")):
+            rel = p.relative_to(root).as_posix()
+            if "/tests/" in f"/{rel}" or rel.startswith("tests/"):
+                continue
+            yield p, rel
+
+
+def _enclosing_def(tree: ast.Module, lineno: int) -> str:
+    """Name of the innermost def containing ``lineno`` (fingerprint ident)."""
+    best = "module"
+    best_span = None
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            end = getattr(node, "end_lineno", node.lineno)
+            if node.lineno <= lineno <= end:
+                span = end - node.lineno
+                if best_span is None or span < best_span:
+                    best, best_span = node.name, span
+    return best
+
+
+def check_interpret(tree: ast.Module, relpath: str) -> list[Finding]:
+    findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if (
+                kw.arg == "interpret"
+                and isinstance(kw.value, ast.Constant)
+                and kw.value.value is True
+            ):
+                findings.append(
+                    Finding(
+                        CHECKER, "hardcoded-interpret", "error", relpath,
+                        kw.value.lineno,
+                        "interpret=True hardcoded outside tests/ — pass "
+                        "interpret=None and let the PR-4 autodetect pick "
+                        "interpreter-on-CPU / compiled-on-TPU; a hardcoded "
+                        "True silently times the Pallas interpreter",
+                        ident=_enclosing_def(tree, kw.value.lineno),
+                    )
+                )
+    return findings
+
+
+def check_prngkey(tree: ast.Module, relpath: str) -> list[Finding]:
+    if not relpath.startswith("src/repro/"):
+        return []
+    if relpath in PRNGKEY_ALLOWLIST:
+        return []
+    if any(relpath.startswith(d) for d in PRNGKEY_EXEMPT_DIRS):
+        return []
+    findings = []
+    for node in ast.walk(tree):
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "PRNGKey"
+        ):
+            findings.append(
+                Finding(
+                    CHECKER, "prngkey-outside-ticket", "error", relpath,
+                    node.lineno,
+                    "jax.random.PRNGKey minted outside the ticket-key "
+                    "derivation sites — randomness not derived from a "
+                    "ticket's key_index cannot be replayed from the trace, "
+                    "which breaks the bit-for-bit record→replay contract",
+                    ident=_enclosing_def(tree, node.lineno),
+                )
+            )
+    return findings
+
+
+def _trace_schema_fields(tree: ast.Module) -> set[str]:
+    """String keys of ``_ARRAYS_V1``/``_ARRAYS_V2`` dict literals, with
+    ``**_ARRAYS_V1``-style spreads resolved by name."""
+    by_name: dict[str, set[str]] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign) or not isinstance(node.value, ast.Dict):
+            continue
+        names = [
+            t.id for t in node.targets if isinstance(t, ast.Name)
+        ]
+        if not any(n in TRACE_SCHEMA_NAMES for n in names):
+            continue
+        keys: set[str] = set()
+        for k in node.value.keys:
+            if k is None:
+                continue  # ** spread; resolved below via values
+            if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                keys.add(k.value)
+        for k, v in zip(node.value.keys, node.value.values):
+            if k is None and isinstance(v, ast.Name):
+                keys |= by_name.get(v.id, set())
+        for n in names:
+            by_name[n] = keys
+    fields: set[str] = set()
+    for n in TRACE_SCHEMA_NAMES:
+        fields |= by_name.get(n, set())
+    return fields
+
+
+def check_trace_fields(tree: ast.Module, relpath: str) -> list[Finding]:
+    fields = _trace_schema_fields(tree)
+    findings = []
+    if not fields:
+        return [
+            Finding(
+                CHECKER, "trace-schema-missing", "error", relpath, 0,
+                "could not find the _ARRAYS_V1/_ARRAYS_V2 dict literals — "
+                "the trace schema moved; update repro.analysis.lints",
+                ident="schema",
+            )
+        ]
+    for node in ast.walk(tree):
+        if not (
+            isinstance(node, ast.Subscript)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "rows"
+            and isinstance(node.slice, ast.Constant)
+            and isinstance(node.slice.value, str)
+        ):
+            continue
+        field = node.slice.value
+        if field not in fields:
+            findings.append(
+                Finding(
+                    CHECKER, "unknown-trace-field", "error", relpath,
+                    node.lineno,
+                    f"rows[{field!r}] is not a trace-v2 array field "
+                    f"({', '.join(sorted(fields))}) — a typo'd row name "
+                    "either KeyErrors mid-run or writes a dict entry the "
+                    "trace saver silently drops",
+                    ident=field,
+                )
+            )
+    return findings
+
+
+def check_repo(root: pathlib.Path) -> list[Finding]:
+    findings: list[Finding] = []
+    for path, rel in _iter_py(root):
+        try:
+            tree = ast.parse(path.read_text(), filename=str(path))
+        except SyntaxError as e:
+            findings.append(
+                Finding(
+                    CHECKER, "syntax-error", "error", rel,
+                    e.lineno or 0, f"cannot parse: {e.msg}", ident="parse",
+                )
+            )
+            continue
+        findings.extend(check_interpret(tree, rel))
+        findings.extend(check_prngkey(tree, rel))
+        if rel == RUNTIME_FILE:
+            findings.extend(check_trace_fields(tree, rel))
+    return findings

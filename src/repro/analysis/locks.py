@@ -1,0 +1,249 @@
+"""Checker 2: lock discipline for the threaded runtime and the server.
+
+The crash-at-grab ticket-loss bug PR 7 fixed is the archetype: a worker
+thread touched shared ticket state outside the runtime lock, and the race
+only fired when a fault-injection test happened to lose the interleaving
+lottery. This checker turns that convention into a machine-checked one,
+keyed on annotations IN the code:
+
+  ``# guarded-by: <lock>``   on (or directly above) an assignment marks
+                             the assigned name — a local like ``shared``
+                             or an attribute like ``self.forest`` — as
+                             state that must only be touched while
+                             holding ``<lock>``;
+  ``# concurrent``           on a ``def`` line opts a function into
+                             checking (for code that races without being
+                             a literal ``threading.Thread`` target, e.g.
+                             the serving hot-swap pair);
+  ``# holds-lock: <lock>``   on a ``def`` line asserts the caller already
+                             holds the lock (``fire_joins`` in
+                             ``ps/runtime.py``) — the body is treated as
+                             if wrapped in ``with <lock>:``.
+
+Checked scopes are thread-target functions — any function whose name
+appears as ``target=`` in a ``threading.Thread(...)`` call — plus
+``# concurrent`` opt-ins, plus functions nested inside either. Within a
+checked scope, EVERY read or write of a guarded name must sit lexically
+inside ``with <lock>:`` (or in a ``holds-lock`` function). Reads count:
+an unlocked read of ``shared["version"]`` races the fold loop's publish
+just as surely as a write.
+
+Purely lexical by design: no alias analysis, no interprocedural lock
+tracking. The runtime keeps its shared state in a handful of names, and a
+lexical rule the checker can actually enforce beats a clever one it
+cannot.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+
+from repro.analysis.findings import Finding
+
+CHECKER = "locks"
+
+# The files whose lock discipline is machine-checked. Annotation comments
+# anywhere else are honored too if the file is passed explicitly.
+DEFAULT_FILES = ("src/repro/ps/runtime.py", "src/repro/serving/forest_server.py")
+
+_GUARDED_RE = re.compile(r"#\s*guarded-by:\s*([A-Za-z_][\w.]*)")
+_HOLDS_RE = re.compile(r"#\s*holds-lock:\s*([A-Za-z_][\w.]*)")
+_CONCURRENT_RE = re.compile(r"#\s*concurrent\b")
+
+
+def _kind_of(node: ast.AST) -> str:
+    ctx = getattr(node, "ctx", None)
+    return "write" if isinstance(ctx, (ast.Store, ast.Del)) else "read"
+
+
+def _expr_name(node: ast.AST) -> str | None:
+    """Dotted name for Name/Attribute expressions (``self._lock``)."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _expr_name(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def _assign_targets(node: ast.AST) -> list[str]:
+    targets: list[ast.AST] = []
+    if isinstance(node, ast.Assign):
+        targets = list(node.targets)
+    elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+        targets = [node.target]
+    out = []
+    for t in targets:
+        name = _expr_name(t)
+        if name:
+            out.append(name)
+    return out
+
+
+def _collect_annotations(tree: ast.Module, lines: list[str]):
+    """guarded: {name: lock}. A ``# guarded-by`` comment binds to the
+    assignment on its own line, or — when it stands alone — to the first
+    assignment on the next code line."""
+    guarded: dict[str, str] = {}
+    ann_by_line: dict[int, str] = {}
+    for i, line in enumerate(lines, start=1):
+        m = _GUARDED_RE.search(line)
+        if m:
+            ann_by_line[i] = m.group(1)
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            continue
+        lock = ann_by_line.get(node.lineno)
+        if lock is None:
+            # comment-on-its-own-line directly above
+            lock = ann_by_line.get(node.lineno - 1)
+            if lock is not None and lines[node.lineno - 2].strip() and not (
+                lines[node.lineno - 2].lstrip().startswith("#")
+            ):
+                lock = None
+        if lock is None:
+            continue
+        for name in _assign_targets(node):
+            guarded[name] = lock
+    return guarded
+
+
+def _thread_targets(tree: ast.Module) -> set[str]:
+    """Function names passed as ``target=`` to ``threading.Thread``."""
+    out: set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        is_thread = (isinstance(fn, ast.Name) and fn.id == "Thread") or (
+            isinstance(fn, ast.Attribute) and fn.attr == "Thread"
+        )
+        if not is_thread:
+            continue
+        for kw in node.keywords:
+            if kw.arg == "target" and isinstance(kw.value, ast.Name):
+                out.add(kw.value.id)
+    return out
+
+
+class _ScopeVisitor(ast.NodeVisitor):
+    """Walk one checked function body tracking the with-lock stack."""
+
+    def __init__(self, checker: "_FileCheck", fn: ast.FunctionDef, held: set[str]):
+        self.c = checker
+        self.fn = fn
+        self.held = set(held)
+
+    def visit_With(self, node: ast.With) -> None:
+        acquired = set()
+        for item in node.items:
+            name = _expr_name(item.context_expr)
+            if name:
+                acquired.add(name)
+        self.held |= acquired
+        for stmt in node.body:
+            self.visit(stmt)
+        self.held -= acquired
+        # with-header expressions evaluate unlocked, but a lock acquiring
+        # itself is the one legal unlocked touch; skip re-visiting items.
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        # Nested defs inside a checked scope are checked in their own pass
+        # (they inherit checked-ness); don't double-visit here.
+        if node is not self.fn:
+            return
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def _check(self, node: ast.AST, name: str, kind: str) -> None:
+        lock = self.c.guarded.get(name)
+        if lock is None:
+            return
+        if lock in self.held:
+            return
+        self.c.findings.append(
+            Finding(
+                CHECKER, f"unguarded-{kind}", "error", self.c.relpath,
+                node.lineno,
+                f"{kind} of `{name}` (guarded-by: {lock}) outside "
+                f"`with {lock}:` in concurrent scope `{self.fn.name}` — "
+                "the crash-at-grab ticket-loss class: the interleaving "
+                "that breaks this races a fold-loop publish",
+                ident=f"{self.fn.name}:{name}",
+            )
+        )
+
+    def visit_Name(self, node: ast.Name) -> None:
+        self._check(node, node.id, _kind_of(node))
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        name = _expr_name(node)
+        if name:
+            self._check(node, name, _kind_of(node))
+        else:
+            self.generic_visit(node)
+
+    def visit_Subscript(self, node: ast.Subscript) -> None:
+        # `shared["v"] = 1` stores through the subscript: the Store ctx
+        # sits on the Subscript node while the base Name reads — report
+        # the base as the mutated state.
+        base = _expr_name(node.value)
+        if base is not None:
+            self._check(node, base, _kind_of(node))
+            self.visit(node.slice)  # guarded names used as the index
+        else:
+            self.generic_visit(node)
+
+
+class _FileCheck:
+    def __init__(self, path: pathlib.Path, relpath: str):
+        self.relpath = relpath
+        self.source = path.read_text()
+        self.lines = self.source.splitlines()
+        self.tree = ast.parse(self.source, filename=str(path))
+        self.guarded = _collect_annotations(self.tree, self.lines)
+        self.findings: list[Finding] = []
+
+    def run(self) -> list[Finding]:
+        if not self.guarded:
+            return []
+        targets = _thread_targets(self.tree)
+        checked: list[tuple[ast.FunctionDef, set[str]]] = []
+
+        def fn_flags(fn: ast.FunctionDef) -> tuple[bool, set[str]]:
+            header = self.lines[fn.lineno - 1]
+            concurrent = bool(_CONCURRENT_RE.search(header))
+            holds = set(_HOLDS_RE.findall(header))
+            return concurrent, holds
+
+        def collect(node: ast.AST, inherited: bool) -> None:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    concurrent, holds = fn_flags(child)
+                    is_checked = inherited or concurrent or child.name in targets
+                    if is_checked:
+                        checked.append((child, holds))
+                    collect(child, is_checked)
+                else:
+                    collect(child, inherited)
+
+        collect(self.tree, False)
+        for fn, holds in checked:
+            _ScopeVisitor(self, fn, holds).visit(fn)
+        return self.findings
+
+
+def check_file(path: pathlib.Path, relpath: str | None = None) -> list[Finding]:
+    rel = relpath or str(path)
+    return _FileCheck(pathlib.Path(path), rel).run()
+
+
+def check_repo(root: pathlib.Path) -> list[Finding]:
+    findings: list[Finding] = []
+    for rel in DEFAULT_FILES:
+        p = root / rel
+        if p.exists():
+            findings.extend(check_file(p, rel))
+    return findings

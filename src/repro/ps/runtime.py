@@ -730,7 +730,9 @@ class AsyncRuntime:
 
         lock = threading.Lock()
         pushes: "queue.Queue[tuple]" = queue.Queue()
-        shared = {
+        # Everything workers and the fold loop both touch is guarded-by
+        # `lock`; repro.analysis.locks enforces the annotations lexically.
+        shared = {  # guarded-by: lock
             "version": start_fold,
             "f": f,
             "epoch": base_epoch,
@@ -742,13 +744,13 @@ class AsyncRuntime:
                 int(e["ticket"]) for e in base_events if e["kind"] == "crash"
             },
         }
-        ticket_heap = list(pending)
+        ticket_heap = list(pending)  # guarded-by: lock
         heapq.heapify(ticket_heap)
-        f_by_version: dict[int, jax.Array] = {start_fold: f}
-        refcnt: dict[int, int] = {}
-        events: list[dict] = list(base_events)
+        f_by_version: dict[int, jax.Array] = {start_fold: f}  # guarded-by: lock
+        refcnt: dict[int, int] = {}  # guarded-by: lock
+        events: list[dict] = list(base_events)  # guarded-by: lock
         errors: list[BaseException] = []
-        joins = dict(self.faults.join_at)
+        joins = dict(self.faults.join_at)  # guarded-by: lock
         plan = self.faults
 
         def worker(w: int) -> None:
@@ -806,14 +808,13 @@ class AsyncRuntime:
                 errors.append(e)
                 pushes.put(None)
 
-        def start_worker(w: int) -> threading.Thread:
+        def start_worker(w: int) -> threading.Thread:  # holds-lock: lock
             shared["live"].add(w)
             t = threading.Thread(target=worker, args=(w,), daemon=True)
             t.start()
             return t
 
-        def fire_joins(fold: int) -> None:
-            # under lock
+        def fire_joins(fold: int) -> None:  # holds-lock: lock
             for w in [w for w, at in joins.items() if at <= fold]:
                 del joins[w]
                 shared["epoch"] += 1
@@ -838,12 +839,17 @@ class AsyncRuntime:
                 threads.append(start_worker(w))
             fire_joins(start_fold)
 
-        def partial_trace(upto: int, makespan: float) -> RunTrace:
+        def partial_trace(upto: int, makespan: float) -> RunTrace:  # concurrent
+            # Runs on the server thread, but after a simulated halt the
+            # abandoned daemon workers may still be appending events —
+            # snapshot under the lock instead of iterating a live list.
+            with lock:
+                events_snapshot = tuple(events)
             return RunTrace(
                 n_workers=self.n_workers,
                 seed=seed,
                 makespan=makespan,
-                events=tuple(events),
+                events=events_snapshot,
                 n_parts=self.shards.n_parts if self.shards else 0,
                 full_pull_bytes=self.full_pull_bytes,
                 adaptive_rho=rho,

@@ -23,6 +23,7 @@ import collections
 import dataclasses
 import json
 import pathlib
+import threading
 import time
 from typing import Iterable
 
@@ -142,13 +143,17 @@ class ForestServer:
             raise ValueError(
                 f"on_nonfinite must be 'reject' or 'flag', got {on_nonfinite!r}"
             )
-        self.forest = forest
+        # The hot-swap pair must move together: a wave served with the new
+        # forest but the old step (or vice versa) mislabels results. Both
+        # live under `_lock`; repro.analysis.locks checks the discipline.
+        self._lock = threading.Lock()
+        self.forest = forest  # guarded-by: self._lock
         self.bin_edges = jnp.asarray(bin_edges, jnp.float32)
         self.ckpt_root = ckpt_root
         self.max_rows = max_rows
-        self.model_step = model_step
+        self.model_step = model_step  # guarded-by: self._lock
         self.on_nonfinite = on_nonfinite
-        self.waves_served = 0
+        self.waves_served = 0  # guarded-by: self._lock
         self.objective = get_objective(objective) if objective is not None else None
         depth = forest.depth
         n_outputs = forest.n_outputs
@@ -204,22 +209,28 @@ class ForestServer:
             rows += len(req.x)
         return wave
 
-    def _run_wave(self, wave: list[PredictRequest]) -> list[PredictResult]:
+    def _run_wave(self, wave: list[PredictRequest]) -> list[PredictResult]:  # concurrent
         sizes = [len(r.x) for r in wave]
         rows = np.zeros((self.max_rows, self.bin_edges.shape[0]), np.float32)
         rows[: sum(sizes)] = np.concatenate([r.x for r in wave], axis=0)
+        # One consistent snapshot of the swap pair: every result in this
+        # wave is labeled with the step of the forest that computed it,
+        # even if a poller thread swaps mid-wave.
+        with self._lock:
+            forest, model_step = self.forest, self.model_step
         t0 = time.perf_counter()
-        scores = self._predict(self.forest, self.bin_edges, jnp.asarray(rows))
+        scores = self._predict(forest, self.bin_edges, jnp.asarray(rows))
         scores = np.asarray(jax.block_until_ready(scores))
         dt = time.perf_counter() - t0
-        self.waves_served += 1
+        with self._lock:
+            self.waves_served += 1
         results, off = [], 0
         for req, n in zip(wave, sizes):
             results.append(
                 PredictResult(
                     uid=req.uid,
                     scores=scores[off : off + n],
-                    model_step=self.model_step,
+                    model_step=model_step,
                     latency_s=dt,
                     # Recomputed per request at serve time (cheap: <=
                     # max_rows rows) — no uid-keyed bookkeeping to go
@@ -231,16 +242,25 @@ class ForestServer:
         return results
 
     # --------------------------------------------------------------- hot swap
-    def maybe_reload(self) -> bool:
+    def maybe_reload(self) -> bool:  # concurrent
         """Swap in the newest checkpointed forest, if any. Zero-downtime:
-        shapes are static, so the next wave just sees the new pytree."""
+        shapes are static, so the next wave just sees the new pytree.
+        Safe from a poller thread: the (slow) checkpoint load happens
+        outside the lock, then compare-and-swap — a racing reloader that
+        already installed this step or newer wins."""
         if self.ckpt_root is None:
             return False
         step = checkpoint.latest_step(self.ckpt_root)
-        if step is None or step <= self.model_step:
+        with self._lock:
+            template, current = self.forest, self.model_step
+        if step is None or step <= current:
             return False
-        self.forest = load_forest_checkpoint(self.ckpt_root, step, like=self.forest)
-        self.model_step = step
+        forest = load_forest_checkpoint(self.ckpt_root, step, like=template)
+        with self._lock:
+            if step <= self.model_step:
+                return False
+            self.forest = forest
+            self.model_step = step
         return True
 
     def run(

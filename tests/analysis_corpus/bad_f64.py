@@ -1,0 +1,12 @@
+"""Corpus: an in-trace float64 intermediate (the double-rounding shape).
+
+Traced under ``jax_enable_x64`` this promotes to f64 mid-program and
+rounds back down — the value rounds TWICE, violating the round-once
+host-twin rule ``repro.analysis.determinism.audit_f64`` enforces.
+"""
+import jax.numpy as jnp
+
+
+def double_round(x):
+    wide = x.astype(jnp.float64) * 3.141592653589793
+    return wide.astype(jnp.float32)

@@ -1,0 +1,28 @@
+"""Corpus: the crash-at-grab bug class — guarded state touched lock-free.
+
+``repro.analysis.locks`` must flag the write in ``worker`` (a thread
+target) and the read in ``reporter`` (a ``# concurrent`` opt-in).
+"""
+import threading
+
+lock = threading.Lock()
+shared = {"version": 0}  # guarded-by: lock
+
+
+def worker() -> None:
+    shared["version"] += 1  # racy: no lock held
+
+
+def reporter() -> int:  # concurrent
+    return shared["version"]
+
+
+def fine() -> None:
+    with lock:
+        shared["version"] += 1
+
+
+def main() -> None:
+    t = threading.Thread(target=worker)
+    t.start()
+    t.join()

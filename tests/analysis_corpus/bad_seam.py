@@ -1,0 +1,29 @@
+"""Corpus: propose→fold seams ``repro.analysis.determinism`` must flag.
+
+``unpinned_round`` has no barrier at all; ``leaky_round`` pins one value
+but lets ``delta`` flow around the barrier straight into the fold-side
+add — the FMA-contractible mul→add pair the seam audit exists to catch.
+``pinned_round`` is the clean shape (everything crossing the seam passes
+the barrier) and must produce no findings.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def unpinned_round(f, g):
+    delta = g * jnp.float32(0.5)
+    return f + delta
+
+
+def leaky_round(f, g):
+    delta = g * jnp.float32(0.5)
+    tree = delta + jnp.float32(1.0)
+    tree = jax.lax.optimization_barrier(tree)
+    return (f + tree) + delta
+
+
+def pinned_round(f, g):
+    delta = g * jnp.float32(0.5)
+    tree = delta + jnp.float32(1.0)
+    tree, delta = jax.lax.optimization_barrier((tree, delta))
+    return (f + tree) + delta

@@ -1,0 +1,21 @@
+"""Corpus: BlockSpec placements ``repro.analysis.vmem`` must flag.
+
+A ``(1, 1)`` scalar spec without ``memory_space=pltpu.SMEM`` parks a
+scalar in a full VMEM vector tile (the pre-PR-6 split_scan placement);
+``ANY`` leaves placement to the compiler. ``good_scalar_spec`` is the
+correct SMEM form and must be clean.
+"""
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def bad_scalar_spec():
+    return pl.BlockSpec((1, 1), lambda i: (0, 0))
+
+
+def bad_any_spec():
+    return pl.BlockSpec((8, 128), lambda i: (0, 0), memory_space=pltpu.ANY)
+
+
+def good_scalar_spec():
+    return pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pltpu.SMEM)

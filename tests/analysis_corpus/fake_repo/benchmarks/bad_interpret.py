@@ -1,0 +1,5 @@
+"""Corpus (fake repo): hardcoded interpret=True outside tests/."""
+
+
+def run(ops, bins, g):
+    return ops.histogram(bins, g, interpret=True)

@@ -1,0 +1,6 @@
+"""Corpus (fake repo): a PRNGKey minted outside ticket-key derivation."""
+import jax
+
+
+def fresh_key():
+    return jax.random.PRNGKey(1234)

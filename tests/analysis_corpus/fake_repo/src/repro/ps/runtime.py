@@ -1,0 +1,10 @@
+"""Corpus (fake repo): a trace row write outside the v2 schema."""
+import numpy as np
+
+_ARRAYS_V1 = {"schedule": np.int32}
+_ARRAYS_V2 = {**_ARRAYS_V1, "epoch": np.int32}
+
+
+def fill(rows):
+    rows["schedule"][0] = 1
+    rows["staleness"][0] = 2
