@@ -66,6 +66,68 @@ def compare(baseline: dict, fresh: dict, max_regression: float) -> list[str]:
     return failures
 
 
+def compare_collectives(baseline: dict, fresh: dict) -> list[str]:
+    """Gate the collective-bytes accounting rows (BENCH_collectives.json
+    vs a fresh ``benchmarks.gbdt_roofline --collectives`` run).
+
+    Unlike wall times, these numbers are TRACE-TIME accounting
+    (``jax.eval_shape`` + a byte recorder) — fully deterministic on any
+    host — so the gate is exact equality, not a tolerance band:
+      * ``geometry`` rows must match exactly (same reason as
+        ``smoke_geometry`` above);
+      * every ``bytes_*`` row must match the baseline bit-for-bit — a
+        drift means the builder's collective structure changed, and the
+        fresh snapshot must be recommitted deliberately;
+      * ``reduction_dense`` must stay >= 10 on every row: the 2D
+        argmax-merge exists to beat the dense histogram psum by at least
+        an order of magnitude (DESIGN.md §16), and ``reduction_sparse``
+        must not fall below ``reduction_dense``.
+    """
+    failures: list[str] = []
+    if "smoke_16k_x_256" not in fresh.get("rows", {}):
+        failures.append(
+            "smoke_16k_x_256: the acceptance row is missing from the fresh "
+            "run (even the quick config measures it)"
+        )
+    for name, base_row in baseline.get("rows", {}).items():
+        row = fresh.get("rows", {}).get(name)
+        if row is None:
+            # quick runs measure only the acceptance row; the full-geometry
+            # rows are gated whenever a --full run provides them
+            continue
+        if "error" in row:
+            failures.append(f"{name}: fresh run errored: {row['error'][:200]}")
+            continue
+        if row.get("geometry") != base_row.get("geometry"):
+            failures.append(
+                f"{name}: geometry changed: baseline {base_row.get('geometry')} "
+                f"vs fresh {row.get('geometry')} — if intentional, commit the "
+                "fresh snapshot"
+            )
+            continue
+        for key, base_val in base_row.items():
+            if not key.startswith("bytes_"):
+                continue
+            if row.get(key) != base_val:
+                failures.append(
+                    f"{name}.{key}: {row.get(key)} vs baseline {base_val} "
+                    "(trace-time accounting is deterministic — the collective "
+                    "structure of the build changed)"
+                )
+        red = row.get("reduction_dense", 0.0)
+        if red < 10.0:
+            failures.append(
+                f"{name}: reduction_dense {red:.1f}x < 10x — the argmax "
+                "merge no longer beats the dense histogram psum"
+            )
+        if row.get("reduction_sparse", 0.0) < red:
+            failures.append(
+                f"{name}: reduction_sparse {row.get('reduction_sparse'):.1f}x "
+                f"fell below reduction_dense {red:.1f}x"
+            )
+    return failures
+
+
 def selftest(max_regression: float) -> int:
     """Prove the gate trips: inject a synthetic 1.5x regression into a
     copy of the committed snapshot and assert compare() rejects it, and
@@ -91,8 +153,31 @@ def selftest(max_regression: float) -> int:
     if not compare(baseline, geo, max_regression):
         print("selftest FAILED: a geometry mismatch passed the gate")
         return 1
+
+    coll = json.loads(
+        (pathlib.Path(__file__).resolve().parents[1]
+         / "BENCH_collectives.json").read_text()
+    )
+    if compare_collectives(coll, coll):
+        print("selftest FAILED: collectives snapshot does not pass vs itself")
+        return 1
+    drift = json.loads(json.dumps(coll))
+    first = next(iter(drift["rows"]))
+    drift["rows"][first]["bytes_2d_argmax_merge"] += 4
+    if not compare_collectives(coll, drift):
+        print("selftest FAILED: a collective-bytes drift passed the gate")
+        return 1
+    weak = json.loads(json.dumps(coll))
+    row = weak["rows"][first]
+    row["bytes_2d_argmax_merge"] = row["bytes_1d_dense_psum"] // 2
+    row["reduction_dense"] = 2.0
+    if not any("reduction_dense" in f
+               for f in compare_collectives(coll, weak)):
+        print("selftest FAILED: a sub-10x argmax merge passed the gate")
+        return 1
     print(f"selftest ok: injected +50% regression trips "
-          f"({len(tripped)} rows), geometry drift trips, clean diff passes")
+          f"({len(tripped)} rows), geometry drift trips, collective-bytes "
+          f"drift trips, sub-10x reduction trips, clean diffs pass")
     return 0
 
 
@@ -106,11 +191,25 @@ def main() -> int:
                     help="allowed fractional wall-time growth per _ms row")
     ap.add_argument("--selftest", action="store_true",
                     help="verify the gate trips on an injected regression")
+    ap.add_argument("--collectives", action="store_true",
+                    help="gate collective-bytes rows (exact match + >=10x "
+                         "reduction) instead of wall-time rows")
     args = ap.parse_args()
     if args.selftest:
         return selftest(args.max_regression)
     baseline = json.loads(pathlib.Path(args.baseline).read_text())
     fresh = json.loads(pathlib.Path(args.fresh).read_text())
+    if args.collectives:
+        failures = compare_collectives(baseline, fresh)
+        if failures:
+            print("collective-bytes gate FAILED:")
+            for f in failures:
+                print(f"  - {f}")
+            return 1
+        reds = {name: f"x{row['reduction_dense']:.0f}"
+                for name, row in fresh.get("rows", {}).items()}
+        print(f"collective-bytes gate ok (exact match, reductions {reds})")
+        return 0
     failures = compare(baseline, fresh, args.max_regression)
     if failures:
         print("bench regression gate FAILED:")

@@ -41,6 +41,79 @@ from repro.trees.tree import apply_tree, apply_tree_stack
 WORKERS = [1, 2, 4, 8, 16, 32]
 GBE_BYTES_PER_S = 110e6  # ~1 GbE effective
 
+# Accounting subprocess for the block-distributed 2D mesh: trace the REAL
+# feature-sharded builder (argmax-merge split search, DESIGN.md §16) with
+# a ByteRecorder on forced host devices and report what one tree build
+# actually puts on the wire — fig10's 2D rows derive their communication
+# bytes from this, never from shape arithmetic.
+_MESH2D_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={shards}"
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.mesh import make_gbdt_mesh
+from repro.ps.sharded import collective_bytes_per_build
+from repro.trees.binning import SparseBins
+from repro.trees.learner import LearnerConfig
+
+N, F, E, depth, shards = {N}, {F}, {E}, {depth}, {shards}
+cfg = LearnerConfig(depth=depth, n_bins=64, backend="ref", hist_mode="subtract")
+mesh = make_gbdt_mesh(1, shards)
+dense = jax.ShapeDtypeStruct((N, F), jnp.int32)
+C = max(N * E // F, 1)
+sp = SparseBins(
+    indices=jax.ShapeDtypeStruct((N, E), jnp.int32),
+    codes=jax.ShapeDtypeStruct((N, E), jnp.int32),
+    feat_rows=jax.ShapeDtypeStruct((F, C), jnp.int32),
+    feat_codes=jax.ShapeDtypeStruct((F, C), jnp.int32),
+    zero_bin=jax.ShapeDtypeStruct((F,), jnp.int32),
+)
+out = {{
+    "bytes_2d_dense": collective_bytes_per_build(
+        cfg, mesh, dense, feature_axis="feature")["realized_bytes"],
+    "bytes_2d_sparse": collective_bytes_per_build(
+        cfg, mesh, sp, feature_axis="feature")["realized_bytes"],
+}}
+print("MESH2D_JSON=" + json.dumps(out))
+"""
+
+
+def measure_mesh2d_comm(cfg, data, shards: int = 8) -> dict | None:
+    """ACCOUNTING-derived per-round wire bytes on the (1, ``shards``) 2D
+    mesh — the 2D analogue of ``measure_components``'s pull/tree payload,
+    with the bytes MEASURED from the builder's own collectives
+    (``ps.sharded.collective_bytes_per_build``) instead of hand-derived
+    constants. Returns None when the feature count does not tile the mesh.
+    """
+    import json as _json
+    import os
+    import subprocess
+    import sys
+
+    from repro.trees.binning import SparseBins, to_sparse
+
+    n, f = data.bins.shape
+    if f % shards:
+        return None
+    sp = data.bins if isinstance(data.bins, SparseBins) \
+        else to_sparse(data.bins)
+    code = _MESH2D_CODE.format(
+        N=n, F=f, E=sp.max_nnz_row, depth=cfg.learner.depth, shards=shards
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=1400, env={**os.environ, "PYTHONPATH": "src"},
+    )
+    for line in proc.stdout.splitlines():
+        if line.startswith("MESH2D_JSON="):
+            out = _json.loads(line.split("=", 1)[1])
+            out["shards"] = shards
+            return out
+    return None
+
 
 def measure_components(cfg, data) -> dict:
     key = jax.random.PRNGKey(0)
@@ -287,6 +360,36 @@ def run(quick: bool = True, objective: str | None = None) -> dict:
                 f"P={p}: -{100 * r:.0f}% bytes"
                 for p, r in zip(sp["n_parts"], sp["reduction"])
             ), flush=True)
+        mesh2d = measure_mesh2d_comm(cfg, data)
+        if mesh2d is not None:
+            # The 2D-mesh speedup rows: same Eq.-13 event model, but the
+            # per-round communication payload is the build's OWN measured
+            # collective bytes (argmax merge + partition column) + the
+            # tree push — pull_bytes is replaced by accounting, because on
+            # the block-distributed mesh the target never crosses the
+            # wire; only the build collectives do.
+            for kind in ("dense", "sparse"):
+                wire = mesh2d[f"bytes_2d_{kind}"] + comp["tree_bytes"]
+                t_comm = wire / GBE_BYTES_PER_S
+                sims = []
+                base2d = None
+                for w in WORKERS:
+                    spec = ClusterSpec(
+                        n_workers=w, t_build=comp["t_build"],
+                        t_comm=t_comm, t_server=comp["t_server"],
+                    )
+                    m = simulate_async(spec, n_trees).makespan
+                    base2d = base2d or m
+                    sims.append(base2d / m)
+                mesh2d[f"round_wire_bytes_{kind}"] = wire
+                mesh2d[f"async_sim_2d_{kind}"] = sims
+            rows["mesh2d"] = mesh2d
+            print(f"  {tag} 2D mesh (1x{mesh2d['shards']}) accounting: "
+                  f"{mesh2d['bytes_2d_dense']:,}B/round dense, "
+                  f"{mesh2d['bytes_2d_sparse']:,}B/round sparse "
+                  f"(vs {comp['pull_bytes']:,}B pull constant); "
+                  f"@32w sim {mesh2d['async_sim_2d_dense'][-1]:.1f}x / "
+                  f"{mesh2d['async_sim_2d_sparse'][-1]:.1f}x", flush=True)
         rows["sync_model"] = speedup_model_sync(
             warr, comp["t_build"], comp["t_comm"], comp["t_server"]
         ).tolist()

@@ -142,9 +142,125 @@ def run(quick: bool = True) -> dict:
     return payload
 
 
+# ------------------------------------------------- collective-bytes rows
+# Trace-time accounting (jax.eval_shape + collectives.ByteRecorder —
+# nothing executes, so paper-scale geometries account in seconds): the
+# per-tree-build bytes on the wire for the three build shapes of
+# DESIGN.md §16. The committed snapshot is BENCH_collectives.json at the
+# repo root; check_bench.py --collectives gates it (the numbers are
+# DETERMINISTIC, so the gate is exact equality, not a tolerance).
+_COLLECTIVES_CODE = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    import json
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.launch.mesh import make_gbdt_mesh
+    from repro.ps.sharded import collective_bytes_per_build
+    from repro.trees.binning import SparseBins
+    from repro.trees.learner import LearnerConfig
+
+    N, F, B, E, depth = {N}, {F}, {B}, {E}, {depth}
+    cfg = LearnerConfig(
+        depth=depth, n_bins=B, backend="ref", hist_mode="subtract"
+    )
+    dense = jax.ShapeDtypeStruct((N, F), jnp.int32)
+    C = max(N * E // F, 1)  # feature-major ELL capacity at this density
+    sp = SparseBins(
+        indices=jax.ShapeDtypeStruct((N, E), jnp.int32),
+        codes=jax.ShapeDtypeStruct((N, E), jnp.int32),
+        feat_rows=jax.ShapeDtypeStruct((F, C), jnp.int32),
+        feat_codes=jax.ShapeDtypeStruct((F, C), jnp.int32),
+        zero_bin=jax.ShapeDtypeStruct((F,), jnp.int32),
+    )
+    mesh_1d = jax.make_mesh((16,), ("data",))
+    mesh_2d = make_gbdt_mesh(1, 16)
+    row = {{"geometry": {{
+        "N": N, "F": F, "B": B, "depth": depth, "nnz_row": E,
+        "hist_mode": "subtract", "shards": 16,
+    }}}}
+    row["bytes_1d_dense_psum"] = collective_bytes_per_build(
+        cfg, mesh_1d, dense
+    )["realized_bytes"]
+    s2 = collective_bytes_per_build(
+        cfg, mesh_2d, dense, feature_axis="feature"
+    )
+    row["bytes_2d_argmax_merge"] = s2["realized_bytes"]
+    row["by_kind_2d"] = s2["realized_by_kind"]
+    ss = collective_bytes_per_build(cfg, mesh_2d, sp, feature_axis="feature")
+    row["bytes_2d_sparse"] = ss["realized_bytes"]
+    row["by_kind_2d_sparse"] = ss["realized_by_kind"]
+    row["reduction_dense"] = (
+        row["bytes_1d_dense_psum"] / max(row["bytes_2d_argmax_merge"], 1)
+    )
+    row["reduction_sparse"] = (
+        row["bytes_1d_dense_psum"] / max(row["bytes_2d_sparse"], 1)
+    )
+    print("GBDT_COLLECTIVES_JSON=" + json.dumps(row))
+    """
+)
+
+# (name, N, F, B, nnz/row, depth) — the acceptance row first, then the
+# paper-dataset lookalikes (real-sim ~72K x 21K, E2006 ~16K x 150K).
+COLLECTIVE_GEOMETRIES = [
+    ("smoke_16k_x_256", 16_384, 256, 64, 64, 7),
+    ("realsim_like", 65_536, 20_992, 64, 52, 7),
+    ("e2006_like", 16_384, 150_528, 64, 96, 7),
+]
+
+
+def _run_collectives_row(N, F, B, E, depth) -> dict:
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         _COLLECTIVES_CODE.format(N=N, F=F, B=B, E=E, depth=depth)],
+        capture_output=True, text=True, timeout=1400,
+        env={**os.environ, "PYTHONPATH": "src"},
+    )
+    for line in proc.stdout.splitlines():
+        if line.startswith("GBDT_COLLECTIVES_JSON="):
+            return json.loads(line.split("=", 1)[1])
+    return {"error": proc.stderr[-800:]}
+
+
+def collectives(quick: bool = True) -> dict:
+    """Measure per-tree-build collective bytes for every geometry row."""
+    geoms = COLLECTIVE_GEOMETRIES[:1] if quick else COLLECTIVE_GEOMETRIES
+    rows = {}
+    for name, N, F, B, E, depth in geoms:
+        row = _run_collectives_row(N, F, B, E, depth)
+        rows[name] = row
+        if "error" in row:
+            print(f"  {name}: FAILED {row['error'][:200]}")
+            continue
+        print(f"  {name} (N={N} F={F} B={B} depth={depth}): "
+              f"dense-psum {row['bytes_1d_dense_psum']:,}B "
+              f"argmax-merge {row['bytes_2d_argmax_merge']:,}B "
+              f"(x{row['reduction_dense']:.0f}) "
+              f"sparse {row['bytes_2d_sparse']:,}B "
+              f"(x{row['reduction_sparse']:.0f})")
+    payload = {"rows": rows}
+    save("gbdt_collectives", payload)
+    return payload
+
+
 def main(quick: bool = True):
-    return run(quick)
+    out = run(quick)
+    out["collectives"] = collectives(quick)["rows"]
+    return out
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--collectives", action="store_true",
+                    help="only the collective-bytes accounting rows")
+    args = ap.parse_args()
+    if args.collectives:
+        collectives(quick=not args.full)
+    else:
+        main(quick=not args.full)

@@ -1,0 +1,15 @@
+"""Package-wide jax configuration.
+
+``threefry_partitionable`` pins the SHARD-INVARIANT counter-based PRNG
+implementation: the bits a seeded draw produces no longer depend on how
+XLA's SPMD partitioner happens to shard the surrounding program. Without
+it, ``jax.random`` values inside a jitted training step can differ
+between device meshes (e.g. a 2-device 1D mesh vs an 8-device 2D mesh
+partition the same binomial draw differently), which would break the 2D
+block-distributed parity contract: same seed => same forest on a 1D
+'data' mesh and the (data x feature) mesh (DESIGN.md §16). The golden
+corpus under ``tests/golden/`` is generated under this flag.
+"""
+import jax
+
+jax.config.update("jax_threefry_partitionable", True)

@@ -31,7 +31,12 @@ convention and caught only when a nightly replay flaked:
                 breaks lockstep with the single-device goldens. The audit
                 taints shard-local aggregates in the shard_map jaxpr and
                 flags any non-additive combine (sub/div/max/min) of a
-                not-yet-merged aggregate upstream of a ``psum``.
+                not-yet-merged aggregate upstream of a ``psum``. The 2D
+                block-distributed build adds a second ordering edge: the
+                merged-argmax collectives (``pmax``/``pmin``, DESIGN.md
+                §16) must consume gains derived from row-psum-MERGED
+                histograms — an argmax merge of partial sums is flagged
+                the same way.
 
 All three audits run on JAXPRS — traced, never executed — so they check
 the program XLA will actually see, not the source text.
@@ -60,6 +65,13 @@ _REDUCTION_PRIMS = {
 _NONADDITIVE_PRIMS = {"sub", "div", "max", "min", "pow", "rem"}
 _BARRIER_PRIMS = {"optimization_barrier", "opt_barrier"}
 _COLLECTIVE_PRIMS = {"psum", "psum2", "all_reduce", "allreduce"}
+# Non-additive COLLECTIVES — the 2D merged-argmax split search (pmax of
+# per-shard best gains, pmin of global flat indices; DESIGN.md §16). Their
+# outputs are merged like psum's, but feeding one a shard-local partial
+# aggregate is itself the violation: max/min do not commute with the row
+# psum, so an argmax merge that runs BEFORE the data-axis histogram merge
+# picks its winner from partial sums and the forest leaves lockstep.
+_NONADDITIVE_COLLECTIVES = {"pmax", "pmin"}
 
 
 # ------------------------------------------------------------ jaxpr walking
@@ -331,6 +343,22 @@ def _propagate(
         in_agg = [id(v) in agg for v in ivs]
         if name in _COLLECTIVE_PRIMS:
             continue  # outputs merged: neither local nor agg
+        if name in _NONADDITIVE_COLLECTIVES:
+            if any(loc and ag for loc, ag in zip(in_local, in_agg)):
+                findings.append(
+                    Finding(
+                        CHECKER, "premerge-combine", "error", "<traced>", 0,
+                        f"{where}: `{name}` merges a shard-local partial "
+                        "aggregate — the argmax-merge collective must run "
+                        "on gains derived from row-psum-MERGED histograms "
+                        "(max/min do not commute with the data-axis psum; "
+                        "DESIGN.md §16): merging partial sums picks a "
+                        "different winner per program form and the forest "
+                        "leaves bitwise lockstep",
+                        ident=f"{where}:{name}",
+                    )
+                )
+            continue  # outputs merged across the axis: clear both taints
         subs = list(_sub_jaxprs(eqn))
         if name in ("pjit", "closed_call", "core_call", "xla_call") and len(subs) == 1:
             sub = subs[0]
@@ -429,23 +457,32 @@ def check_repo(root=None) -> list[Finding]:
 
 
 def _check_sharded(cfg, data) -> list[Finding]:
-    """Trace the shard_map data-parallel build on a 1-device mesh (the
-    jaxpr is identical in structure to the multi-shard program — psum and
-    all — which is all the ordering audit needs)."""
+    """Trace the shard_map builds on 1-device meshes (the jaxpr is
+    identical in structure to the multi-shard program — psum, pmax/pmin
+    and all — which is all the ordering audit needs): the 1D data-parallel
+    build, and the 2D (data × feature) build with its argmax-merge
+    collective, on dense and on SparseBins data."""
     import jax
     import numpy as np
     from jax.sharding import Mesh
 
-    from repro.ps.sharded import make_sharded_builder
+    from repro.ps.sharded import make_sharded_builder, make_sharded_builder_2d
+    from repro.trees.binning import to_sparse
 
-    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
-    builder = make_sharded_builder(cfg.learner, mesh, "data")
     g = jax.numpy.zeros((data.n_samples,), jax.numpy.float32)
     rng = jax.random.PRNGKey(0)  # analysis: ignore[prngkey-outside-ticket]
     findings = []
+    mesh_1d = Mesh(np.array(jax.devices()[:1]), ("data",))
+    mesh_2d = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "feature"))
+    sparse_bins = to_sparse(data.bins)
     for mode in ("subtract", "rebuild"):
-        builder_m = make_sharded_builder(cfg.learner._replace(hist_mode=mode), mesh, "data")
+        cfg_m = cfg.learner._replace(hist_mode=mode)
+        builder_m = make_sharded_builder(cfg_m, mesh_1d, "data")
         jaxpr = jax.make_jaxpr(builder_m)(data.bins, g, g, rng)
         findings += audit_psum_order(jaxpr, f"ps.sharded[{mode}]")
-    del builder
+        builder_2d = make_sharded_builder_2d(cfg_m, mesh_2d)
+        jaxpr = jax.make_jaxpr(builder_2d)(data.bins, g, g, rng)
+        findings += audit_psum_order(jaxpr, f"ps.sharded2d[{mode}]")
+        jaxpr = jax.make_jaxpr(builder_2d)(sparse_bins, g, g, rng)
+        findings += audit_psum_order(jaxpr, f"ps.sharded2d-sparse[{mode}]")
     return findings

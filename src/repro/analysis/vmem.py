@@ -36,6 +36,7 @@ CHECKER = "vmem"
 
 KERNEL_FILES = (
     "src/repro/kernels/histogram.py",
+    "src/repro/kernels/histogram_sparse.py",
     "src/repro/kernels/split_scan.py",
     "src/repro/kernels/forest_traversal.py",
     "src/repro/kernels/level_build.py",

@@ -1,0 +1,125 @@
+"""Byte-accounted collective wrappers: psum / pmax / pmin with a recorder.
+
+The GBDT build path's collectives (histogram psums over the 'data' axis,
+the 2D mesh's argmax-merge pmax/pmin over the 'feature' axis, the
+partition-column psum) all route through this module instead of calling
+``jax.lax`` directly. Semantically the wrappers ARE ``jax.lax.psum`` /
+``pmax`` / ``pmin`` — same primitive in the jaxpr, so the determinism
+auditor (``repro.analysis.determinism``) sees the unwrapped program — but
+while a ``ByteRecorder`` is active every call also records its payload:
+(kind, axis, bytes, shapes). That is what makes the roofline's
+"collective bytes per round" row a MEASURED number (counted off the
+traced program) rather than a modeled constant.
+
+Recording happens at TRACE time. jit caches skip retracing, so a
+measurement pass must trace fresh programs: ``ps.sharded.
+collective_bytes_per_build`` calls ``jax.clear_caches()`` and traces the
+builder abstractly (``jax.eval_shape`` — nothing executes, so even
+roofline-sized geometries account in milliseconds).
+
+Realized vs payload bytes: an all-reduce over a size-1 mesh axis moves
+nothing on the wire. The recorder keeps both views — ``payload_bytes``
+(every call) and ``realized_bytes`` (calls whose axis spans > 1 shard,
+per the ``axis_sizes`` the recorder was built with). Reduction claims
+(dense-psum vs argmax-merge) compare realized bytes at equal device
+counts.
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+
+import jax
+
+
+@dataclass
+class CollectiveEvent:
+    kind: str  # 'psum' | 'pmax' | 'pmin'
+    axis: str
+    bytes: int
+    shapes: tuple
+    axis_size: int  # 0 = unknown (recorder built without axis_sizes)
+
+
+@dataclass
+class ByteRecorder:
+    """Accumulates one ``CollectiveEvent`` per wrapped collective call.
+
+    ``axis_sizes`` maps mesh axis name -> shard count; without it every
+    event counts as realized (conservative: never under-reports).
+    """
+
+    axis_sizes: dict = field(default_factory=dict)
+    events: list = field(default_factory=list)
+
+    def add(self, kind: str, axis: str, x) -> None:
+        leaves = jax.tree.leaves(x)
+        nbytes = sum(l.size * l.dtype.itemsize for l in leaves)
+        self.events.append(
+            CollectiveEvent(
+                kind=kind,
+                axis=axis,
+                bytes=int(nbytes),
+                shapes=tuple(tuple(l.shape) for l in leaves),
+                axis_size=int(self.axis_sizes.get(axis, 0)),
+            )
+        )
+
+    # ------------------------------------------------------------- views
+    def payload_bytes(self) -> int:
+        return sum(e.bytes for e in self.events)
+
+    def realized_bytes(self) -> int:
+        """Bytes of collectives whose axis actually spans > 1 shard."""
+        return sum(e.bytes for e in self.events if e.axis_size != 1)
+
+    def summary(self) -> dict:
+        by_kind: dict[str, int] = {}
+        by_axis: dict[str, int] = {}
+        for e in self.events:
+            if e.axis_size == 1:
+                continue
+            by_kind[e.kind] = by_kind.get(e.kind, 0) + e.bytes
+            by_axis[e.axis] = by_axis.get(e.axis, 0) + e.bytes
+        return {
+            "n_collectives": len(self.events),
+            "payload_bytes": self.payload_bytes(),
+            "realized_bytes": self.realized_bytes(),
+            "realized_by_kind": by_kind,
+            "realized_by_axis": by_axis,
+        }
+
+
+_ACTIVE: list[ByteRecorder] = []
+
+
+@contextlib.contextmanager
+def recording(recorder: ByteRecorder):
+    """Route every wrapped collective traced inside the block into
+    ``recorder``. Nestable; every active recorder sees every event."""
+    _ACTIVE.append(recorder)
+    try:
+        yield recorder
+    finally:
+        _ACTIVE.remove(recorder)
+
+
+def _record(kind: str, axis: str, x) -> None:
+    for rec in _ACTIVE:
+        rec.add(kind, axis, x)
+
+
+# -------------------------------------------------------------- wrappers
+def psum(x, axis_name: str):
+    _record("psum", axis_name, x)
+    return jax.lax.psum(x, axis_name)
+
+
+def pmax(x, axis_name: str):
+    _record("pmax", axis_name, x)
+    return jax.lax.pmax(x, axis_name)
+
+
+def pmin(x, axis_name: str):
+    _record("pmin", axis_name, x)
+    return jax.lax.pmin(x, axis_name)

@@ -32,9 +32,18 @@ class DatasetSpec:
 
 
 def make_sparse_classification(
-    n: int, dim: int, nnz: int, seed: int = 0, label_noise: float = 0.05
+    n: int,
+    dim: int,
+    nnz: int,
+    seed: int = 0,
+    label_noise: float = 0.05,
+    sparse: bool | str = False,
 ) -> BinnedData:
-    """High-dim sparse binary classification; all samples distinct."""
+    """High-dim sparse binary classification; all samples distinct.
+
+    ``sparse`` passes through to ``bin_dataset`` — ``True``/``'auto'``
+    yields the ``SparseBins`` layout for the 2D feature-sharded path.
+    """
     rng = np.random.default_rng(seed)
     x = np.zeros((n, dim), np.float32)
     rows = np.repeat(np.arange(n), nnz)
@@ -46,7 +55,7 @@ def make_sparse_classification(
     y = (logits > np.median(logits)).astype(np.float32)
     flip = rng.random(n) < label_noise
     y = np.where(flip, 1.0 - y, y)
-    return bin_dataset(x, y, n_bins=64)
+    return bin_dataset(x, y, n_bins=64, sparse=sparse)
 
 
 def make_dense_low_diversity(

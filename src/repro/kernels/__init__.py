@@ -11,6 +11,7 @@ from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.forest_traversal import forest_traverse_pallas
 from repro.kernels.histogram import histogram_pallas
+from repro.kernels.histogram_sparse import histogram_sparse_pallas
 from repro.kernels.split_scan import split_gain_pallas
 
 __all__ = [
@@ -19,5 +20,6 @@ __all__ = [
     "flash_attention_pallas",
     "forest_traverse_pallas",
     "histogram_pallas",
+    "histogram_sparse_pallas",
     "split_gain_pallas",
 ]

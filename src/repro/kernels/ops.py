@@ -12,8 +12,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import collectives
 from repro.kernels import ref as _ref
 from repro.kernels.histogram import histogram_pallas
+from repro.kernels.histogram_sparse import histogram_sparse_pallas
 from repro.kernels.split_scan import split_gain_pallas
 
 BACKENDS = ("auto", "ref", "pallas", "fused")
@@ -52,8 +54,130 @@ def _pad_to(x: jax.Array, multiple: int, axis: int, fill) -> jax.Array:
     return jnp.pad(x, widths, constant_values=fill)
 
 
+@functools.partial(jax.jit, static_argnames=("n_samples",))
+def _sparse_local_dense(
+    feat_rows: jax.Array,  # (F, C) int32 sample ids, -1 pad
+    feat_codes: jax.Array,  # (F, C) int32 stored codes
+    zero_bin: jax.Array,  # (F,) int32
+    n_samples: int,
+) -> jax.Array:
+    """Exact dense (N, F) int32 from the feature-major ELL store — the same
+    integers as ``binning.to_dense`` (one stored entry per cell, integer
+    scatter), but built from the shard-local feature-major view so it works
+    on a feature shard where no row-major store exists."""
+    f, _ = feat_rows.shape
+    valid = feat_rows >= 0
+    rows = jnp.where(valid, feat_rows, 0)
+    cols = jnp.broadcast_to(jnp.arange(f, dtype=jnp.int32)[:, None], rows.shape)
+    delta = jnp.where(valid, feat_codes - zero_bin[:, None], 0)
+    base = jnp.broadcast_to(zero_bin[None, :], (n_samples, f)).astype(jnp.int32)
+    return base.at[rows.reshape(-1), cols.reshape(-1)].add(delta.reshape(-1))
+
+
+def _node_totals(
+    node_ids: jax.Array,
+    grad: jax.Array,
+    hess: jax.Array,
+    active_nodes: jax.Array,  # (n_sub,) int32
+    n_nodes: int,
+) -> jax.Array:
+    """(2, n_sub) grad/hess mass per active node — the zero-bin complement's
+    'what the stored entries are missing' term. Row-local (N work); under
+    data sharding it psums alongside the stored histogram."""
+    n_sub = active_nodes.shape[0]
+    inv = jnp.full((n_nodes,), -1, jnp.int32)
+    inv = inv.at[active_nodes].set(jnp.arange(n_sub, dtype=jnp.int32))
+    row = jnp.where(node_ids >= 0, inv[jnp.clip(node_ids, 0, n_nodes - 1)], -1)
+    active = row >= 0
+    rowc = jnp.where(active, row, 0)
+    tg = jax.ops.segment_sum(
+        jnp.where(active, grad, 0.0), rowc, num_segments=n_sub
+    )
+    th = jax.ops.segment_sum(
+        jnp.where(active, hess, 0.0), rowc, num_segments=n_sub
+    )
+    return jnp.stack([tg, th]).astype(jnp.float32)
+
+
+def _zero_bin_complement(
+    stored: jax.Array,  # (2, R, F, B) stored-entry histograms
+    totals: jax.Array,  # (2, R) per-node grad/hess mass
+    zero_bin: jax.Array,  # (F,) int32
+) -> jax.Array:
+    """Add each node's absent-entry mass at the feature's zero bin.
+
+    ``missing = totals - sum_b stored`` is a SUBTRACTION: on a sharded
+    build it must consume the psummed stored/totals, never shard-local
+    partials (the subtract-after-psum invariant, now per feature shard —
+    the determinism checker's taint pass walks exactly this seam).
+    """
+    row_sum = stored.sum(axis=-1)  # (2, R, F)
+    missing = totals[:, :, None] - row_sum
+    b_iota = jnp.arange(stored.shape[-1], dtype=jnp.int32)
+    onehot = (zero_bin[:, None] == b_iota[None, :]).astype(stored.dtype)  # (F, B)
+    return stored + missing[..., None] * onehot[None, None]
+
+
+def build_histogram_sparse(
+    feat_rows: jax.Array,  # (F_local, C) int32
+    feat_codes: jax.Array,  # (F_local, C) int32
+    zero_bin: jax.Array,  # (F_local,) int32 — SLICED to the local features
+    node_ids: jax.Array,
+    grad: jax.Array,
+    hess: jax.Array,
+    n_nodes: int,
+    n_bins: int,
+    backend: str = "auto",
+    entry_block: int = 512,
+    feature_block: int = 8,
+    axis_name: str | None = None,
+    active_nodes: jax.Array | None = None,
+) -> jax.Array:
+    """(2, R, F_local, n_bins) histograms from the feature-major sparse store.
+
+    The sparse twin of ``build_histogram``/``build_histogram_subset``:
+    operands are the raw feature-major arrays (possibly one feature shard
+    of them, with ``zero_bin`` sliced to match). ``backend='ref'``
+    densifies the local store exactly and runs the dense oracle — bitwise
+    identical to the dense path on the same features. The pallas path runs
+    the nnz-scaling stored-entry kernel, psums stored counts AND node
+    totals over ``axis_name`` first, and applies the zero-bin complement
+    only after the collective (subtract-after-psum, per feature shard).
+    """
+    backend = resolve_backend(backend)
+    n_samples = node_ids.shape[0]
+    active = (
+        jnp.arange(n_nodes, dtype=jnp.int32)
+        if active_nodes is None
+        else active_nodes.astype(jnp.int32)
+    )
+    if backend == "ref":
+        dense = _sparse_local_dense(feat_rows, feat_codes, zero_bin, n_samples)
+        if active_nodes is None:
+            out = _ref.histogram_ref(dense, node_ids, grad, hess, n_nodes, n_bins)
+        else:
+            out = _ref.histogram_subset_ref(
+                dense, node_ids, grad, hess, active, n_nodes, n_bins
+            )
+        if axis_name is not None:
+            out = collectives.psum(out, axis_name)
+        return out
+    interpret = jax.default_backend() != "tpu"
+    fb = min(feature_block, max(feat_rows.shape[0], 1))
+    stored = histogram_sparse_pallas(
+        feat_rows, feat_codes, node_ids, grad, hess, n_nodes, n_bins,
+        entry_block=entry_block, feature_block=fb, interpret=interpret,
+        active_nodes=None if active_nodes is None else active,
+    )
+    totals = _node_totals(node_ids, grad, hess, active, n_nodes)
+    if axis_name is not None:
+        stored = collectives.psum(stored, axis_name)
+        totals = collectives.psum(totals, axis_name)
+    return _zero_bin_complement(stored, totals, zero_bin)
+
+
 def build_histogram(
-    bins: jax.Array,
+    bins,
     node_ids: jax.Array,
     grad: jax.Array,
     hess: jax.Array,
@@ -66,12 +190,25 @@ def build_histogram(
 ) -> jax.Array:
     """(2, n_nodes, F, n_bins) grad/hess histograms. See kernels/histogram.py.
 
+    ``bins`` may be the dense (N, F) int32 matrix or a
+    ``trees.binning.SparseBins`` — the sparse layout dispatches to the
+    nnz-scaling path (``build_histogram_sparse``); on ``backend='ref'``
+    the two are bitwise identical.
+
     ``axis_name``: when running data-parallel under shard_map (samples
     sharded over a mesh axis), each shard builds its local histogram with
     the kernel and the results merge with a psum across the axis — every
     cell is a sum over disjoint sample subsets, so partial sums compose
     exactly (the parameter-server aggregation as an all-reduce).
     """
+    from repro.trees.binning import SparseBins  # lazy: trees imports kernels
+
+    if isinstance(bins, SparseBins):
+        return build_histogram_sparse(
+            bins.feat_rows, bins.feat_codes, bins.zero_bin,
+            node_ids, grad, hess, n_nodes, n_bins, backend=backend,
+            feature_block=feature_block, axis_name=axis_name,
+        )
     backend = resolve_backend(backend)
     if backend == "ref":
         out = _ref.histogram_ref(bins, node_ids, grad, hess, n_nodes, n_bins)
@@ -88,12 +225,12 @@ def build_histogram(
             sample_block=sample_block, feature_block=fb, interpret=interpret,
         )[:, :, :n_feat, :]
     if axis_name is not None:
-        out = jax.lax.psum(out, axis_name)
+        out = collectives.psum(out, axis_name)
     return out
 
 
 def build_histogram_subset(
-    bins: jax.Array,
+    bins,
     node_ids: jax.Array,
     grad: jax.Array,
     hess: jax.Array,
@@ -119,6 +256,15 @@ def build_histogram_subset(
     subtracts after the collective so every shard derives the sibling from
     identical merged values and stays in lockstep.
     """
+    from repro.trees.binning import SparseBins  # lazy: trees imports kernels
+
+    if isinstance(bins, SparseBins):
+        return build_histogram_sparse(
+            bins.feat_rows, bins.feat_codes, bins.zero_bin,
+            node_ids, grad, hess, n_nodes, n_bins, backend=backend,
+            feature_block=feature_block, axis_name=axis_name,
+            active_nodes=active_nodes.astype(jnp.int32),
+        )
     backend = resolve_backend(backend)
     active_nodes = active_nodes.astype(jnp.int32)
     if backend == "ref":
@@ -139,7 +285,7 @@ def build_histogram_subset(
             active_nodes=active_nodes,
         )[:, :, :n_feat, :]
     if axis_name is not None:
-        out = jax.lax.psum(out, axis_name)
+        out = collectives.psum(out, axis_name)
     return out
 
 

@@ -143,6 +143,45 @@ def level_build_ref(
     return hist, feat, thr, best, new_node
 
 
+def histogram_sparse_ref(
+    sp,  # trees.binning.SparseBins
+    node_ids: jax.Array,  # (N,) int32, -1 = inactive
+    grad: jax.Array,  # (N,) f32
+    hess: jax.Array,  # (N,) f32
+    n_nodes: int,
+    n_bins: int,
+) -> jax.Array:
+    """Sparse-layout histogram oracle: densify, then ``histogram_ref``.
+
+    The explicit-zero-bin round trip is exact integers, so this is
+    BITWISE-identical to the dense path on the same data — the parity
+    contract ``tests/test_sparse.py`` pins. The Pallas sparse kernel
+    (nnz-scaling stored-entry contraction + zero-bin complement) must
+    match this to f32 tolerance, exactly like the dense kernel vs its
+    oracle.
+    """
+    from repro.trees import binning  # lazy: trees.learner imports kernels
+
+    return histogram_ref(binning.to_dense(sp), node_ids, grad, hess, n_nodes, n_bins)
+
+
+def histogram_sparse_subset_ref(
+    sp,  # trees.binning.SparseBins
+    node_ids: jax.Array,
+    grad: jax.Array,
+    hess: jax.Array,
+    active_nodes: jax.Array,  # (n_sub,) int32
+    n_nodes: int,
+    n_bins: int,
+) -> jax.Array:
+    """Node-subset sparse oracle — densify + ``histogram_subset_ref``."""
+    from repro.trees import binning
+
+    return histogram_subset_ref(
+        binning.to_dense(sp), node_ids, grad, hess, active_nodes, n_nodes, n_bins
+    )
+
+
 @jax.jit
 def split_scan_ref(
     hist: jax.Array,  # (2, L, F, B) f32 grad/hess histograms

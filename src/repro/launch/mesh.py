@@ -27,6 +27,17 @@ def make_host_mesh() -> jax.sharding.Mesh:
     return _mesh((1, 1), ("data", "model"))
 
 
+def make_gbdt_mesh(n_data: int = 1, n_feature: int = 1) -> jax.sharding.Mesh:
+    """The block-distributed GBDT training mesh: rows × feature columns.
+
+    ``(n_data, 1)`` is the classic 1D data-parallel shape re-expressed in
+    2D; ``(1, n_feature)`` is the sparse/high-dimensional regime where the
+    full-histogram psum disappears in favor of the (L,)-sized argmax merge
+    (DESIGN.md §16). Requires ``n_data * n_feature`` visible devices.
+    """
+    return _mesh((n_data, n_feature), ("data", "feature"))
+
+
 # TPU v5e hardware constants used by the roofline analysis (per chip).
 PEAK_FLOPS_BF16 = 197e12  # FLOP/s
 HBM_BW = 819e9  # bytes/s

@@ -97,6 +97,12 @@ def run_gbdt(args) -> None:
     from repro.trees.learner import LearnerConfig
 
     obj, data = gbdt_dataset_for(args.objective, args.seed)
+    if args.sparse:
+        from repro.trees import binning
+
+        data = data._replace(bins=binning.to_sparse(data.bins))
+        print(f"sparse bins: {data.bins.max_nnz_row} nnz/row ELL "
+              f"(dense round-trip exact)")
     cfg = SGBDTConfig(
         n_trees=args.steps,
         step_length=0.15,
@@ -108,8 +114,36 @@ def run_gbdt(args) -> None:
         ),
     )
     if args.runtime == "threads":
+        if args.mesh != "none":
+            raise SystemExit(
+                "--mesh applies to the simulated PS engine; the threaded "
+                "runtime builds on the local device"
+            )
         return run_gbdt_threads(args, cfg, data, obj)
-    trainer = Trainer(cfg)
+    mesh = None
+    if args.mesh != "none":
+        from repro.launch.mesh import make_gbdt_mesh
+
+        shape = args.mesh_shape or ("2" if args.mesh == "1d" else "1x2")
+        if args.mesh == "1d":
+            pd, pf = int(shape.partition("x")[0]), 1
+            mesh = jax.make_mesh((pd,), ("data",))
+        else:
+            pd, _, pf = shape.partition("x")
+            pd, pf = int(pd), int(pf or 1)
+            mesh = make_gbdt_mesh(pd, pf)
+        print(f"mesh: {args.mesh} {dict(mesh.shape)} "
+              f"({len(mesh.devices.ravel())} devices)")
+    trainer = Trainer(cfg, mesh=mesh)
+    cb = trainer.collective_bytes(data)
+    if cb is not None:
+        # One tree build per round: the realized (wire) bytes of every
+        # collective in the sharded build, by primitive kind.
+        kinds = ", ".join(
+            f"{k}={v:,}B" for k, v in sorted(cb["realized_by_kind"].items())
+        )
+        print(f"collective bytes/round: {cb['realized_bytes']:,}B "
+              f"realized ({kinds})")
     schedule = ("round_robin", args.workers)
     print(f"gbdt[{obj.name}, K={obj.n_outputs}]: {args.steps} rounds, "
           f"{args.workers} PS workers ({'scan' if args.scan else 'loop'} form)")
@@ -324,6 +358,21 @@ def main() -> None:
                          "without HBM staging); 'pallas' is the staged "
                          "kernel pipeline; 'ref' the jnp oracles; 'auto' "
                          "picks pallas on TPU, ref elsewhere")
+    ap.add_argument("--mesh", choices=("none", "1d", "2d"), default="none",
+                    help="GBDT build sharding: '1d' shards samples over a "
+                         "('data',) mesh (psum-merged histograms); '2d' the "
+                         "block-distributed (data x feature) mesh with the "
+                         "argmax-merge split search (DESIGN.md §16). Needs "
+                         "enough devices — on CPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    ap.add_argument("--mesh-shape", default=None, metavar="PDxPF",
+                    help="mesh shape, e.g. '4' (--mesh 1d) or '2x2' / '1x4' "
+                         "(--mesh 2d; sparse bins need Pd=1)")
+    ap.add_argument("--sparse", action="store_true",
+                    help="convert the binned dataset to the SparseBins "
+                         "explicit-zero-bin layout (exact round-trip; "
+                         "histogram cost scales with nnz, and feature-"
+                         "sharded builds move only the argmax merge)")
     ap.add_argument("--objective", default="logistic",
                     help="GBDT objective registry spec: logistic | mse | "
                          "quantile[:a] | huber | multiclass:K | lambdarank")

@@ -194,7 +194,11 @@ class Trainer:
 
     With ``mesh`` whose ``axis_name`` axis has > 1 shard, tree builds run
     data-parallel via ``shard_map`` + ``psum`` (samples must divide the
-    shard count; pad the dataset if needed).
+    shard count; pad the dataset if needed). A mesh that ALSO carries a
+    ``feature_axis`` axis (any size) selects the block-distributed 2D
+    build: feature columns shard across it and split decisions merge with
+    the (L,)-sized argmax collective instead of full-histogram psums
+    (``ps.sharded.make_sharded_builder_2d``, DESIGN.md §16).
     """
 
     def __init__(
@@ -203,17 +207,40 @@ class Trainer:
         *,
         mesh: jax.sharding.Mesh | None = None,
         axis_name: str = "data",
+        feature_axis: str = "feature",
     ):
         self.cfg = cfg
         self.mesh = mesh
         self.axis_name = axis_name
+        self.feature_axis = feature_axis
         self.builder: TreeBuilder | None = None
-        if mesh is not None and dict(mesh.shape).get(axis_name, 1) > 1:
+        self._is_2d = mesh is not None and feature_axis in mesh.axis_names
+        if self._is_2d:
+            from repro.ps.sharded import make_sharded_builder_2d
+
+            self.builder = make_sharded_builder_2d(
+                cfg.learner, mesh, data_axis=axis_name, feature_axis=feature_axis
+            )
+        elif mesh is not None and dict(mesh.shape).get(axis_name, 1) > 1:
             from repro.ps.sharded import make_sharded_builder
 
             self.builder = make_sharded_builder(cfg.learner, mesh, axis_name)
         self._loop_cache: dict[int, Callable] = {}
         self._scan_cache: dict[int, Callable] = {}
+
+    def collective_bytes(self, data: BinnedData) -> dict | None:
+        """MEASURED per-tree-build collective bytes on this trainer's mesh
+        (trace-time accounting; see ``ps.sharded.collective_bytes_per_build``).
+        None when builds are single-device (no collectives at all)."""
+        if self.builder is None:
+            return None
+        from repro.ps.sharded import collective_bytes_per_build
+
+        return collective_bytes_per_build(
+            self.cfg.learner, self.mesh, data.bins,
+            data_axis=self.axis_name,
+            feature_axis=self.feature_axis if self._is_2d else None,
+        )
 
     # The unified step: loop and scan trace exactly this function. The scan
     # form adds a per-round loss as a scan output; the loop form does not

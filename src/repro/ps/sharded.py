@@ -34,7 +34,9 @@ except ImportError:
     from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import collectives
 from repro.kernels import ops
+from repro.trees.binning import SparseBins
 from repro.trees.learner import LearnerConfig, build_tree
 
 
@@ -58,12 +60,120 @@ def make_sharded_builder(cfg: LearnerConfig, mesh: Mesh, axis_name: str = "data"
     shard's derived rows are identical (see trees/learner.py).
     """
     local = functools.partial(build_tree, cfg._replace(axis_name=axis_name))
-    return shard_map(
+    fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(P(axis_name), P(axis_name), P(axis_name), P()),
         out_specs=P(),
     )
+
+    def builder(bins, g, h, rng):
+        if isinstance(bins, SparseBins):
+            raise ValueError(
+                "SparseBins cannot shard over a 1D data axis (the "
+                "feature-major store holds global sample ids); use "
+                "make_sharded_builder_2d on a (1, P_f) mesh"
+            )
+        return fn(bins, g, h, rng)
+
+    return builder
+
+
+def make_sharded_builder_2d(
+    cfg: LearnerConfig,
+    mesh: Mesh,
+    data_axis: str = "data",
+    feature_axis: str = "feature",
+):
+    """A TreeBuilder running on the block-distributed 2D (data × feature)
+    mesh — rows sharded over ``data_axis``, feature columns over
+    ``feature_axis`` (DESIGN.md §16).
+
+    Each shard histograms only its own (rows/P_d, F/P_f) block: row psums
+    merge histograms over the data axis FIRST (the subtract-after-psum
+    invariant now holds per feature shard), then the split decision merges
+    over the feature axis with the (L,)-sized argmax collective — never a
+    full (2, L, F, B) histogram psum. The dense partition step reconstructs
+    the winning bin column with a one-byte-per-sample owner-masked psum.
+
+    Dense bins shard as ``P(data, feature)``. A ``SparseBins`` dataset
+    shards its feature-major store over ``feature_axis`` while the
+    row-major store and ``zero_bin`` stay replicated (they route samples
+    by GLOBAL feature id, which costs no collective at all) — and is
+    restricted to ``data_axis`` size 1: the feature-major entries hold
+    global sample ids, which row sharding would invalidate.
+    """
+    d_size = mesh.shape[data_axis]
+    f_size = mesh.shape[feature_axis]
+    cfg2 = cfg._replace(
+        axis_name=data_axis, feature_axis=feature_axis, feature_shards=f_size
+    )
+    local = functools.partial(build_tree, cfg2)
+
+    def builder(bins, g, h, rng):
+        if isinstance(bins, SparseBins):
+            if d_size != 1:
+                raise ValueError(
+                    "sparse 2D builds need a (1, P_f) mesh: the feature-major "
+                    f"store holds global sample ids, but {data_axis!r} has "
+                    f"size {d_size}"
+                )
+            bins_spec = SparseBins(
+                indices=P(), codes=P(),
+                feat_rows=P(feature_axis), feat_codes=P(feature_axis),
+                zero_bin=P(),
+            )
+        else:
+            bins_spec = P(data_axis, feature_axis)
+        fn = shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(bins_spec, P(data_axis), P(data_axis), P()),
+            out_specs=P(),
+        )
+        return fn(bins, g, h, rng)
+
+    return builder
+
+
+def collective_bytes_per_build(
+    cfg: LearnerConfig,
+    mesh: Mesh,
+    bins,  # (N, F) array / ShapeDtypeStruct, or a SparseBins of either
+    data_axis: str = "data",
+    feature_axis: str | None = None,
+) -> dict:
+    """MEASURED per-tree-build collective bytes on the given mesh.
+
+    Traces the sharded builder abstractly (``jax.eval_shape`` — nothing
+    executes, so roofline-sized geometries account in milliseconds) with a
+    ``collectives.ByteRecorder`` active, and returns its summary:
+    ``realized_bytes`` counts only collectives whose mesh axis spans more
+    than one shard (a psum over a size-1 axis moves nothing on the wire).
+    ``jax.clear_caches()`` first — recording happens at trace time, and a
+    cache hit would skip the trace.
+    """
+    import jax.numpy as jnp
+
+    def _sds(x):
+        return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+    bins_in = jax.tree.map(_sds, bins)
+    n = bins.shape[0]
+    gh = jax.ShapeDtypeStruct((n,), jnp.float32)
+    # Tracer-only key: eval_shape never executes, nothing is ever replayed.
+    rng = jax.random.PRNGKey(0)  # analysis: ignore[prngkey-outside-ticket]
+    if feature_axis is not None:
+        builder = make_sharded_builder_2d(
+            cfg, mesh, data_axis=data_axis, feature_axis=feature_axis
+        )
+    else:
+        builder = make_sharded_builder(cfg, mesh, axis_name=data_axis)
+    rec = collectives.ByteRecorder(axis_sizes=dict(mesh.shape))
+    jax.clear_caches()
+    with collectives.recording(rec):
+        jax.eval_shape(builder, bins_in, gh, gh, rng)
+    return rec.summary()
 
 
 def build_histogram_sharded(

@@ -47,25 +47,46 @@ DEFAULT_RULES: dict[str, tuple[str, ...]] = {
     "media": (),
     # --- GBDT parameter-server engine (repro.ps) ---
     "samples": ("data",),  # binned rows / labels / targets / weights
-    "features": ("model",),  # feature columns of the binned matrix
+    "features": ("feature", "model"),  # feature columns of the binned matrix
 }
 
 
-def gbdt_data_specs(mesh: Mesh, shard_features: bool = False):
+def gbdt_data_specs(mesh: Mesh, shard_features: bool = False, sparse: bool = False):
     """PartitionSpecs for a ``BinnedData`` pytree on the PS mesh.
 
     Samples shard over 'data' (each shard builds partial histograms that
     merge with a psum — the engine's worker/server split); feature columns
-    optionally shard over 'model' for very wide datasets. Bin edges ride
-    with the features; the scalar ``n_bins`` is replicated.
+    shard over the block-distributed 2D mesh's 'feature' axis when the mesh
+    has one (DESIGN.md §16), else optionally over 'model' for very wide
+    datasets. Bin edges ride with the features; the scalar ``n_bins`` is
+    replicated.
+
+    ``sparse=True`` returns the specs for a ``SparseBins``-carrying
+    dataset: only the feature-major store shards over the feature axis —
+    the row-major store and ``zero_bin`` stay replicated (they route
+    samples by global feature id), and the row dim stays UNSHARDED (sparse
+    feature-major entries hold global sample ids; see
+    ``ps.sharded.make_sharded_builder_2d``).
     """
-    from repro.trees.binning import BinnedData  # local: avoid a hard dep
+    from repro.trees.binning import BinnedData, SparseBins  # local: no hard dep
 
     names = dict(mesh.shape)
     d = "data" if names.get("data", 1) > 1 else None
-    m = "model" if shard_features and names.get("model", 1) > 1 else None
+    if "feature" in names:
+        m = "feature"
+    else:
+        m = "model" if shard_features and names.get("model", 1) > 1 else None
+    if sparse:
+        bins = SparseBins(
+            indices=P(), codes=P(),
+            feat_rows=P(m), feat_codes=P(m),
+            zero_bin=P(),
+        )
+        d = None
+    else:
+        bins = P(d, m)
     return BinnedData(
-        bins=P(d, m),
+        bins=bins,
         bin_edges=P(m),
         labels=P(d),
         multiplicity=P(d),

@@ -59,7 +59,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import collectives
 from repro.kernels import ops
+from repro.trees.binning import SparseBins, gather_feature_bins
 from repro.trees.tree import Tree
 
 
@@ -78,6 +80,19 @@ class LearnerConfig(NamedTuple):
     # fast path); 'rebuild' — full per-level histogram builds (the exact
     # pre-subtraction semantics). See the module docstring.
     hist_mode: str = "subtract"
+    # Mesh axis FEATURES are sharded over — the block-distributed 2D mesh
+    # (DESIGN.md §16). Each shard histograms and scans only its own
+    # (L, F/P_f, B) bin block; split decisions merge with the (L,)-sized
+    # argmax all-reduce (pmax gain + pmin global index) instead of
+    # psumming full histograms, and the dense partition reconstructs the
+    # winning bin column with an owner-masked uint8 psum. None = every
+    # shard holds every feature (the 1D path, unchanged).
+    feature_axis: str | None = None
+    # Static feature-shard count. Consulted only on the DENSE 2D path,
+    # where the GLOBAL feature count (the feature-mask draw must be global
+    # so 1D and 2D runs consume identical rng) is not recoverable from the
+    # local bins shape. SparseBins carries the global width in zero_bin.
+    feature_shards: int = 1
 
 
 def _check_hist_mode(cfg: LearnerConfig) -> None:
@@ -99,7 +114,7 @@ def _smaller_children(
     """
     counts = jax.ops.segment_sum(h, node, num_segments=n_nodes)
     if cfg.axis_name is not None:
-        counts = jax.lax.psum(counts, cfg.axis_name)
+        counts = collectives.psum(counts, cfg.axis_name)
     parents = jnp.arange(n_nodes // 2, dtype=jnp.int32)
     go_odd = (counts[0::2] > counts[1::2]).astype(jnp.int32)
     return 2 * parents + go_odd
@@ -149,24 +164,50 @@ def _level_histogram(
 def _staged_level(
     cfg: LearnerConfig,
     backend: str,
-    bins: jax.Array,
+    hist_bins,  # histogram view: dense (N, F_loc) or shard-local SparseBins
+    route_bins,  # partition view: dense (N, F_loc) or the row-major store
     node: jax.Array,
     g: jax.Array,
     h: jax.Array,
-    feat_mask: jax.Array,
+    feat_mask: jax.Array,  # (F_loc,) — the shard's slice of the global mask
     level: int,
     parent_hist: jax.Array | None,
 ):
     """One level via the staged pipeline (histogram -> gain -> partition),
-    each stage round-tripping HBM. Returns (hist, feat, thr, new_node)."""
-    n_nodes, n_bins = 1 << level, cfg.n_bins
-    hist = _level_histogram(cfg, bins, node, g, h, level, parent_hist, backend)
-    gain = ops.split_gain(hist, cfg.lam, cfg.min_child_hess, backend=backend)
-    gain = jnp.where(feat_mask[None, :, None], gain, -jnp.inf)  # (L, F, B)
+    each stage round-tripping HBM. Returns (hist, feat, thr, new_node).
 
+    Under feature sharding (``cfg.feature_axis``) the histogram/gain/argmax
+    stages see only the shard's own (L, F_loc, B) block; the split decision
+    then merges across the feature axis with two (L,)-sized collectives:
+    ``pmax`` of the local best gains, then ``pmin`` of the GLOBAL flat
+    (feature * B + bin) index among the shards achieving that max. Because
+    shard s owns the contiguous global columns [s*F_loc, (s+1)*F_loc), the
+    global flat order equals the 1D path's flat order — so the pmin
+    reproduces the first-maximum tie-break BITWISE, with (L,) floats + (L,)
+    ints on the wire instead of the full (2, L, F, B) histogram psum.
+    ``feat`` is returned in GLOBAL feature ids either way.
+    """
+    n_nodes, n_bins = 1 << level, cfg.n_bins
+    hist = _level_histogram(cfg, hist_bins, node, g, h, level, parent_hist, backend)
+    gain = ops.split_gain(hist, cfg.lam, cfg.min_child_hess, backend=backend)
+    gain = jnp.where(feat_mask[None, :, None], gain, -jnp.inf)  # (L, F_loc, B)
+
+    f_local = gain.shape[1]
     flat = gain.reshape(n_nodes, -1)
     idx = jnp.argmax(flat, axis=-1)
     best = jnp.take_along_axis(flat, idx[:, None], axis=-1)[:, 0]
+
+    if cfg.feature_axis is not None:
+        shard = jax.lax.axis_index(cfg.feature_axis)
+        gidx = idx.astype(jnp.int32) + shard * (f_local * n_bins)
+        best_g = collectives.pmax(best, cfg.feature_axis)
+        # Among shards holding the global max, the lowest global flat index
+        # wins — all--inf rows tie at shard 0's index 0, exactly like the
+        # 1D argmax, and the pass-left fix below overrides them anyway.
+        cand = jnp.where(best == best_g, gidx, jnp.iinfo(jnp.int32).max)
+        idx = collectives.pmin(cand, cfg.feature_axis)
+        best = best_g
+
     feat = (idx // n_bins).astype(jnp.int32)
     thr = (idx % n_bins).astype(jnp.int32)
 
@@ -175,7 +216,22 @@ def _staged_level(
     feat = jnp.where(ok, feat, 0)
     thr = jnp.where(ok, thr, n_bins - 1)
 
-    val = jnp.take_along_axis(bins, jnp.take(feat, node)[:, None], axis=1)[:, 0]
+    f_of = jnp.take(feat, node)  # (N,) global winning feature per sample
+    if cfg.feature_axis is not None and not isinstance(route_bins, SparseBins):
+        # Dense 2D partition: only the winning feature's owner shard holds
+        # its column, so each shard contributes its owned values and a
+        # one-byte-per-sample psum reconstructs the column everywhere
+        # (bin ids < n_bins <= 256 — uint8 is exact).
+        lo = jax.lax.axis_index(cfg.feature_axis) * f_local
+        owned = (f_of >= lo) & (f_of < lo + f_local)
+        col = jnp.clip(f_of - lo, 0, f_local - 1)
+        v = jnp.take_along_axis(route_bins, col[:, None], axis=1)[:, 0]
+        v = jnp.where(owned, v, 0).astype(jnp.uint8)
+        val = collectives.psum(v, cfg.feature_axis).astype(jnp.int32)
+    else:
+        # 1D dense gather, or the sparse row-major store (replicated across
+        # feature shards: routing needs no collective at all).
+        val = gather_feature_bins(route_bins, f_of)
     go_right = (val > jnp.take(thr, node)).astype(jnp.int32)
     return hist, feat, thr, 2 * node + go_right
 
@@ -212,36 +268,67 @@ def _fused_level(
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def build_tree(
     cfg: LearnerConfig,
-    bins: jax.Array,  # (N, F) int32
+    bins,  # (N, F) int32 dense matrix, or a ``SparseBins``
     g: jax.Array,  # (N,) f32 — weighted gradient target
     h: jax.Array,  # (N,) f32 — weighted hessian / sample weight
     rng: jax.Array,  # feature-subsampling key
 ) -> Tree:
     from repro.kernels.level_build import fused_level_fits
 
-    n, n_feat = bins.shape
     depth, n_bins = cfg.depth, cfg.n_bins
+    sparse = isinstance(bins, SparseBins)
+    feature_sharded = cfg.feature_axis is not None
+    if sparse:
+        # Under feature sharding only the feature-major store is sharded;
+        # the row-major store + zero_bin stay replicated (they route
+        # samples through GLOBAL feature ids). The histogram view gets the
+        # zero-bin slice matching its local feature block.
+        n = bins.n_samples
+        f_local = bins.feat_rows.shape[0]
+        f_global = bins.n_features
+        hist_bins = bins
+        if feature_sharded and f_local != f_global:
+            lo = jax.lax.axis_index(cfg.feature_axis) * f_local
+            zb = jax.lax.dynamic_slice(bins.zero_bin, (lo,), (f_local,))
+            hist_bins = bins._replace(zero_bin=zb)
+    else:
+        n, f_local = bins.shape
+        f_global = f_local * (cfg.feature_shards if feature_sharded else 1)
+        hist_bins = bins
 
     backend = ops.resolve_backend(cfg.backend, allow_fused=True)
     # The fused program computes split decisions from the histograms it
     # holds in VMEM — under shard_map those are LOCAL, and the decision
-    # must see the psum-merged level. The collective seam therefore pins
-    # the staged order (histogram -> psum -> scan); see ps/sharded.py.
-    use_fused = backend == "fused" and cfg.axis_name is None
+    # must see the psum-merged level (data axis) / argmax-merged decision
+    # (feature axis). The collective seam therefore pins the staged order
+    # (histogram -> psum -> scan -> merge); see ps/sharded.py. The sparse
+    # layout is staged-only too (the fused kernel is the dense program).
+    use_fused = (
+        backend == "fused"
+        and cfg.axis_name is None
+        and not feature_sharded
+        and not sparse
+    )
     if backend == "fused":
         # The staged fallback: matched-block pallas when the fused program
         # is merely over VMEM budget for a level; the platform default
         # under shard_map, where interpret-mode pallas_call has no
         # replication rule (the collective seam, see ps/sharded.py).
-        staged = "pallas" if cfg.axis_name is None else ops.resolve_backend("auto")
+        staged = "pallas" if use_fused else ops.resolve_backend("auto")
     else:
         staged = backend
 
+    # The feature mask is drawn over the GLOBAL feature space from the
+    # replicated rng — a 2D run consumes the key exactly like its 1D twin
+    # — and each shard slices out its own contiguous block.
     feat_mask = (
-        jax.random.uniform(rng, (n_feat,)) < cfg.feature_fraction
+        jax.random.uniform(rng, (f_global,)) < cfg.feature_fraction
         if cfg.feature_fraction < 1.0
-        else jnp.ones((n_feat,), bool)
+        else jnp.ones((f_global,), bool)
     )
+    if feature_sharded and f_local != f_global:
+        lo = jax.lax.axis_index(cfg.feature_axis) * f_local
+        feat_mask = jax.lax.dynamic_slice(feat_mask, (lo,), (f_local,))
 
     node = jnp.zeros((n,), jnp.int32)  # heap ids, level-local after offset
     features = []
@@ -252,13 +339,13 @@ def build_tree(
         n_nodes = 1 << level
         n_sub = max(n_nodes // 2, 1) if (cfg.hist_mode == "subtract" and level) \
             else n_nodes
-        if use_fused and fused_level_fits(n, n_nodes, n_sub, n_feat, n_bins):
+        if use_fused and fused_level_fits(n, n_nodes, n_sub, f_local, n_bins):
             hist, feat, thr, node = _fused_level(
                 cfg, bins, node, g, h, feat_mask, level, hist
             )
         else:
             hist, feat, thr, node = _staged_level(
-                cfg, staged, bins, node, g, h, feat_mask, level, hist
+                cfg, staged, hist_bins, bins, node, g, h, feat_mask, level, hist
             )
         features.append(feat)
         thresholds.append(thr)
@@ -268,8 +355,8 @@ def build_tree(
     leaf_g = jax.ops.segment_sum(g, node, num_segments=n_leaves)
     leaf_h = jax.ops.segment_sum(h, node, num_segments=n_leaves)
     if cfg.axis_name is not None:  # merge leaf stats across data shards
-        leaf_g = jax.lax.psum(leaf_g, cfg.axis_name)
-        leaf_h = jax.lax.psum(leaf_h, cfg.axis_name)
+        leaf_g = collectives.psum(leaf_g, cfg.axis_name)
+        leaf_h = collectives.psum(leaf_h, cfg.axis_name)
     leaf_value = -leaf_g / (leaf_h + cfg.lam)
     leaf_value = jnp.where(leaf_h > 0, leaf_value, 0.0)
 

@@ -15,6 +15,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.trees.binning import gather_feature_bins
+
 
 class Tree(NamedTuple):
     """One regression tree over binned features.
@@ -53,16 +55,22 @@ def empty_tree(depth: int) -> Tree:
 
 @functools.partial(jax.jit, static_argnames=("depth",))
 def _leaf_index(
-    bins: jax.Array, feature: jax.Array, threshold: jax.Array, depth: int
+    bins, feature: jax.Array, threshold: jax.Array, depth: int
 ) -> jax.Array:
-    """Route samples (N, F) to leaf indices (N,) by a depth-step heap walk."""
+    """Route samples (N, F) to leaf indices (N,) by a depth-step heap walk.
+
+    ``bins`` may be the dense matrix or a ``binning.SparseBins`` — the
+    per-step feature lookup goes through ``gather_feature_bins``, so
+    training-time partition and serving-time routing read the same values
+    on either layout.
+    """
     n = bins.shape[0]
     node = jnp.zeros((n,), jnp.int32)
 
     def step(_, node):
         feat = jnp.take(feature, node)
         thr = jnp.take(threshold, node)
-        val = jnp.take_along_axis(bins, feat[:, None], axis=1)[:, 0]
+        val = gather_feature_bins(bins, feat)
         go_right = (val > thr).astype(jnp.int32)
         return 2 * node + 1 + go_right
 
@@ -71,18 +79,18 @@ def _leaf_index(
     return node - n_internal
 
 
-def apply_tree(tree: Tree, bins: jax.Array) -> jax.Array:
-    """Predict (N,) float32 for binned inputs (N, F)."""
+def apply_tree(tree: Tree, bins) -> jax.Array:
+    """Predict (N,) float32 for binned inputs (N, F) — dense or sparse."""
     leaf = _leaf_index(bins, tree.feature, tree.threshold, tree.depth)
     return jnp.take(tree.leaf_value, leaf)
 
 
-def leaf_indices(tree: Tree, bins: jax.Array) -> jax.Array:
+def leaf_indices(tree: Tree, bins) -> jax.Array:
     """Expose leaf routing — used by tests and by the projection analysis."""
     return _leaf_index(bins, tree.feature, tree.threshold, tree.depth)
 
 
-def apply_tree_stack(trees: Tree, bins: jax.Array) -> jax.Array:
+def apply_tree_stack(trees: Tree, bins) -> jax.Array:
     """Predict (N, K) for a stacked tree group (leading K axis per leaf).
 
     A K-output boosting round produces one tree per output as a single

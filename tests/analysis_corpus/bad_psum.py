@@ -33,3 +33,31 @@ def make_good_builder(mesh: Mesh):
         return parent - left  # post-merge: commutes with the collective
 
     return shard_map(body, mesh=mesh, in_specs=(P("data"), P("data")), out_specs=P())
+
+
+def make_bad_argmax_builder(mesh: Mesh):
+    """Argmax merge BEFORE the row psum — the 2D mesh inversion.
+
+    ``best`` is a max over shard-local PARTIAL histogram sums: pmax-merging
+    it picks the winner from per-shard partials (max does not commute with
+    the data-axis psum), so different shard counts elect different splits.
+    """
+
+    def body(bins, g):
+        hist = jax.ops.segment_sum(g, bins, num_segments=8)  # local partial
+        best = jnp.max(hist)  # gain over UNMERGED sums
+        return jax.lax.pmax(best, "data")  # premerge argmax: the violation
+
+    return shard_map(body, mesh=mesh, in_specs=(P("data"), P("data")), out_specs=P())
+
+
+def make_good_argmax_builder(mesh: Mesh):
+    """Row psum first, argmax merge after — DESIGN.md §16 ordering."""
+
+    def body(bins, g):
+        hist = jax.ops.segment_sum(g, bins, num_segments=8)
+        hist = jax.lax.psum(hist, "data")  # merge rows FIRST
+        best = jnp.max(hist)  # gain over merged sums
+        return jax.lax.pmax(best, "data")  # merged-argmax collective: clean
+
+    return shard_map(body, mesh=mesh, in_specs=(P("data"), P("data")), out_specs=P())

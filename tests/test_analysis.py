@@ -129,6 +129,22 @@ def test_psum_order_flags_premerge_subtract():
     assert determinism.audit_psum_order(good, "corpus") == []
 
 
+def test_psum_order_flags_premerge_argmax():
+    """The 2D-mesh inversion: pmax of gains over UNMERGED partial
+    histograms must fire; row-psum-then-pmax (the merged-argmax split
+    search, DESIGN.md §16) must stay clean."""
+    mod = _import_corpus("bad_psum")
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+    bins = jnp.zeros((8,), jnp.int32)
+    g = jnp.zeros((8,), jnp.float32)
+    bad = jax.make_jaxpr(mod.make_bad_argmax_builder(mesh))(bins, g)
+    fs = determinism.audit_psum_order(bad, "corpus")
+    assert _codes(fs) == {"premerge-combine"}
+    assert any("pmax" in f.message for f in fs)
+    good = jax.make_jaxpr(mod.make_good_argmax_builder(mesh))(bins, g)
+    assert determinism.audit_psum_order(good, "corpus") == []
+
+
 def test_determinism_repo_round_path_is_clean():
     """The real engine honors all three invariants (seam pinned, no f64,
     twin bitwise-equal, subtract after psum)."""

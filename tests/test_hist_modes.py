@@ -140,7 +140,16 @@ def test_training_mode_parity(objective, sparse_data):
 @pytest.mark.parametrize("objective", ["logistic", "multiclass:3", "quantile:0.5"])
 def test_propose_round_mode_parity(objective, sparse_data, key):
     """One worker round per objective: the pushed (tree, delta) payloads of
-    the two modes agree to f32 tolerance (K-output shapes included)."""
+    the two modes agree to f32 tolerance (K-output shapes included).
+
+    The bitwise structure assertions need a draw whose deep-node gains are
+    decisively separated (the file-docstring contract: subtraction rounding
+    may flip near-tied argmaxes). The shard-invariant PRNG flag (PR 9,
+    ``jax_threefry_partitionable``) re-rolled the stream and PRNGKey(0) now
+    lands two level-2 near-ties under multiclass:3 — fold to a decisive
+    draw instead of weakening the assertions.
+    """
+    key = jax.random.fold_in(key, 1)
     data = sparse_data
     if objective == "multiclass:3":
         data = data._replace(

@@ -292,3 +292,163 @@ def test_adaptive_step_rescues_aggressive_step_under_staleness(sparse_data):
     assert adaptive_loss < fixed_loss * 0.75, (fixed_loss, adaptive_loss)
     # and the deflated run is actually good, not just "less bad"
     assert adaptive_loss < 0.45, adaptive_loss
+
+
+# --------------------------------------------- 2D (data x feature) sharding
+_SHARD2D_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import importlib.util
+    import json
+    import pathlib
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    import repro.data as D
+    from repro.core.sgbdt import init_state
+    from repro import checkpoint
+    from repro.launch.mesh import make_gbdt_mesh
+    from repro.ps.engine import Trainer
+    from repro.ps.runtime import RunTrace, replay_trace
+    from repro.ps.sharded import (
+        collective_bytes_per_build,
+        make_sharded_builder,
+        make_sharded_builder_2d,
+    )
+    from repro.trees import binning
+    from repro.trees.learner import LearnerConfig, build_tree
+
+    assert jax.device_count() == 8
+    results = {}
+
+    def same(a, b):
+        return all(
+            bool(np.array_equal(np.asarray(x), np.asarray(y)))
+            for x, y in zip(a, b)
+        )
+
+    cfg = LearnerConfig(depth=3, n_bins=64)
+    data = D.make_sparse_classification(512, 64, 8, seed=3)
+    sp = binning.to_sparse(data.bins)
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    g = jax.random.normal(k1, (512,))
+    h = jnp.abs(jax.random.normal(k2, (512,))) + 0.1
+
+    # (1, 4): feature-only sharding is BITWISE vs single-device (the data
+    # psum is a size-1 identity; the argmax merge preserves first-max).
+    t0 = build_tree(cfg, data.bins, g, h, key)
+    mesh_14 = make_gbdt_mesh(1, 4)
+    b14 = make_sharded_builder_2d(cfg, mesh_14)
+    results["dense_2d_bitwise"] = same(t0, b14(data.bins, g, h, key))
+    results["sparse_2d_bitwise"] = same(t0, b14(sp, g, h, key))
+
+    # (2, 4) vs a plain 2-shard 1D mesh: identical data-psum structure,
+    # so adding the feature axis changes NOTHING — bitwise incl. leaves.
+    mesh_1d = jax.make_mesh((2,), ("data",))
+    t_1d = make_sharded_builder(cfg, mesh_1d)(data.bins, g, h, key)
+    mesh_24 = make_gbdt_mesh(2, 4)
+    t_24 = make_sharded_builder_2d(cfg, mesh_24)(data.bins, g, h, key)
+    results["mesh_2x4_matches_1d_x2"] = same(t_1d, t_24)
+
+    # 2x2 (data, feature) smoke through the Trainer
+    cfg_t = __import__("repro.core.sgbdt", fromlist=["SGBDTConfig"]).SGBDTConfig(
+        n_trees=4, loss="logistic",
+        learner=LearnerConfig(depth=3, n_bins=64),
+    )
+    mesh_22 = make_gbdt_mesh(2, 2)
+    st_22 = Trainer(cfg_t, mesh=mesh_22).train(data, ("round_robin", 1), seed=3)
+    st_1d = Trainer(cfg_t, mesh=mesh_1d).train(data, ("round_robin", 1), seed=3)
+    results["trainer_2x2_matches_1d_x2"] = same(
+        jax.tree.leaves(st_22.forest), jax.tree.leaves(st_1d.forest)
+    )
+    results["trainer_2x2_finite"] = bool(np.isfinite(np.asarray(st_22.f)).all())
+
+    # Realized collective bytes: argmax merge beats the dense-histogram
+    # psum, sparse beats dense (trace-time accounting, nothing executes).
+    results["bytes_1d"] = collective_bytes_per_build(
+        cfg, mesh_1d, data.bins
+    )["realized_bytes"]
+    results["bytes_2d_dense"] = collective_bytes_per_build(
+        cfg, mesh_14, data.bins, feature_axis="feature"
+    )["realized_bytes"]
+    results["bytes_2d_sparse"] = collective_bytes_per_build(
+        cfg, mesh_14, sp, feature_axis="feature"
+    )["realized_bytes"]
+
+    # Golden-trace replay under the 2D mesh: the committed forest must
+    # reproduce bit-for-bit on dense AND sparse representations.
+    golden = pathlib.Path("tests/golden")
+    spec = importlib.util.spec_from_file_location("golden_regen", golden / "regen.py")
+    regen = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(regen)
+    gcfg, gdata = regen.golden_config(), regen.golden_data()
+    gforest = checkpoint.restore_pytree(
+        golden / "ckpt", regen.GOLDEN_STEP, init_state(gcfg, gdata), check_crc=True
+    ).forest
+    trace = RunTrace.load(golden / "run_trace.json")
+    st_g, _ = replay_trace(
+        gcfg, gdata, trace, trainer=Trainer(gcfg, mesh=make_gbdt_mesh(1, 4))
+    )
+    results["golden_replay_2d_bitwise"] = same(
+        jax.tree.leaves(st_g.forest), jax.tree.leaves(gforest)
+    )
+    gdata_sp = gdata._replace(bins=binning.to_sparse(gdata.bins))
+    st_gs, _ = replay_trace(
+        gcfg, gdata_sp, trace, trainer=Trainer(gcfg, mesh=make_gbdt_mesh(1, 4))
+    )
+    results["golden_replay_2d_sparse_bitwise"] = same(
+        jax.tree.leaves(st_gs.forest), jax.tree.leaves(gforest)
+    )
+
+    print("RESULTS_JSON=" + json.dumps(results))
+    """
+)
+
+
+@pytest.fixture(scope="module")
+def shard2d_results():
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARD2D_SCRIPT],
+        capture_output=True, text=True, timeout=900,
+        env={**os.environ, "PYTHONPATH": "src"},
+    )
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULTS_JSON="):
+            return json.loads(line.split("=", 1)[1])
+    raise RuntimeError(f"subprocess failed:\n{proc.stderr[-3000:]}")
+
+
+def test_2d_feature_shard_bitwise_vs_single_device(shard2d_results):
+    """(1, P_f): the merged-argmax split search preserves the first-max
+    tie-break bitwise on dense and sparse representations."""
+    assert shard2d_results["dense_2d_bitwise"], shard2d_results
+    assert shard2d_results["sparse_2d_bitwise"], shard2d_results
+
+
+def test_2d_mesh_matches_1d_at_same_data_shards(shard2d_results):
+    """(P_d, P_f) == P_d-shard 1D bitwise incl. leaves: the feature axis
+    adds only the argmax merge, which picks the identical split."""
+    assert shard2d_results["mesh_2x4_matches_1d_x2"], shard2d_results
+    assert shard2d_results["trainer_2x2_matches_1d_x2"], shard2d_results
+    assert shard2d_results["trainer_2x2_finite"], shard2d_results
+
+
+def test_2d_collective_bytes_reduced(shard2d_results):
+    """The (L,)-sized argmax merge replaces the full (2, L, F, B) histogram
+    psum; sparse drops the owner-masked partition psum too."""
+    b1 = shard2d_results["bytes_1d"]
+    b2 = shard2d_results["bytes_2d_dense"]
+    bs = shard2d_results["bytes_2d_sparse"]
+    assert b2 < b1 / 10, shard2d_results
+    assert bs < b2, shard2d_results
+
+
+def test_golden_trace_replays_under_2d_mesh(shard2d_results):
+    """Record once, replay anywhere: the committed golden forest
+    reproduces bit-for-bit under the block-distributed 2D mesh."""
+    assert shard2d_results["golden_replay_2d_bitwise"], shard2d_results
+    assert shard2d_results["golden_replay_2d_sparse_bitwise"], shard2d_results
