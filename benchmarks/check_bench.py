@@ -128,6 +128,48 @@ def compare_collectives(baseline: dict, fresh: dict) -> list[str]:
     return failures
 
 
+def compare_serve(baseline: dict, fresh: dict, max_regression: float) -> list[str]:
+    """Gate the serving-latency record (``BENCH_serve.json`` vs a fresh
+    ``benchmarks.gbdt_serve`` run's ``gate`` object).
+
+    Geometry (batch/trees/depth/dim/bins/SLO) must match exactly; every
+    ``*_p99_ms`` row fails if it grew past the tolerance (p50 rows are
+    informational — tail latency is the serving contract); and the
+    continuous engine must have met its SLO on at least half the
+    requests (a broken cut policy serves everything late, which runner
+    jitter cannot explain away)."""
+    gate = fresh.get("gate", fresh)
+    failures: list[str] = []
+    if baseline.get("geometry") != gate.get("geometry"):
+        failures.append(
+            f"geometry changed: baseline {baseline.get('geometry')} vs "
+            f"fresh {gate.get('geometry')} — latencies are not comparable; "
+            "if intentional, commit the fresh snapshot"
+        )
+        return failures
+    for key, base_val in baseline.items():
+        if not key.endswith("_p99_ms"):
+            continue
+        fresh_val = gate.get(key)
+        if not isinstance(fresh_val, (int, float)):
+            failures.append(f"{key}: missing from the fresh run")
+            continue
+        limit = (1.0 + max_regression) * float(base_val)
+        if float(fresh_val) > limit:
+            failures.append(
+                f"{key}: {fresh_val:.2f}ms vs baseline {base_val:.2f}ms "
+                f"(+{100 * (fresh_val / base_val - 1):.0f}%, limit "
+                f"+{100 * max_regression:.0f}%)"
+            )
+    met = gate.get("engine_slo_met")
+    if not isinstance(met, (int, float)) or met < 0.5:
+        failures.append(
+            f"engine_slo_met {met} < 0.5 — the continuous engine is not "
+            "cutting waves inside its latency budget"
+        )
+    return failures
+
+
 def selftest(max_regression: float) -> int:
     """Prove the gate trips: inject a synthetic 1.5x regression into a
     copy of the committed snapshot and assert compare() rejects it, and
@@ -175,9 +217,35 @@ def selftest(max_regression: float) -> int:
                for f in compare_collectives(coll, weak)):
         print("selftest FAILED: a sub-10x argmax merge passed the gate")
         return 1
+    serve = json.loads(
+        (pathlib.Path(__file__).resolve().parents[1] / "BENCH_serve.json")
+        .read_text()
+    )
+    if compare_serve(serve, serve, max_regression):
+        print("selftest FAILED: serve snapshot does not pass vs itself")
+        return 1
+    slow_serve = dict(serve)
+    for key, val in serve.items():
+        if key.endswith("_p99_ms"):
+            slow_serve[key] = 1.5 * float(val)
+    if not compare_serve(serve, slow_serve, max_regression):
+        print("selftest FAILED: a 1.5x serving-p99 regression passed the gate")
+        return 1
+    late = dict(serve)
+    late["engine_slo_met"] = 0.1
+    if not any("slo_met" in f for f in compare_serve(serve, late, max_regression)):
+        print("selftest FAILED: a 10%-SLO-met engine passed the gate")
+        return 1
+    serve_geo = dict(serve)
+    serve_geo["geometry"] = dict(serve["geometry"], batch=1)
+    if not compare_serve(serve, serve_geo, max_regression):
+        print("selftest FAILED: a serving geometry mismatch passed the gate")
+        return 1
+
     print(f"selftest ok: injected +50% regression trips "
           f"({len(tripped)} rows), geometry drift trips, collective-bytes "
-          f"drift trips, sub-10x reduction trips, clean diffs pass")
+          f"drift trips, sub-10x reduction trips, serving p99/SLO/geometry "
+          f"injections trip, clean diffs pass")
     return 0
 
 
@@ -194,11 +262,27 @@ def main() -> int:
     ap.add_argument("--collectives", action="store_true",
                     help="gate collective-bytes rows (exact match + >=10x "
                          "reduction) instead of wall-time rows")
+    ap.add_argument("--serve", action="store_true",
+                    help="gate serving p99 latency + SLO attainment "
+                         "(BENCH_serve.json vs a fresh gbdt_serve run)")
     args = ap.parse_args()
     if args.selftest:
         return selftest(args.max_regression)
     baseline = json.loads(pathlib.Path(args.baseline).read_text())
     fresh = json.loads(pathlib.Path(args.fresh).read_text())
+    if args.serve:
+        failures = compare_serve(baseline, fresh, args.max_regression)
+        if failures:
+            print("serving latency gate FAILED:")
+            for f in failures:
+                print(f"  - {f}")
+            return 1
+        gate = fresh.get("gate", fresh)
+        p99s = {k: f"{gate[k]:.1f}ms" for k in gate if k.endswith("_p99_ms")}
+        print(f"serving latency gate ok (<= +{100 * args.max_regression:.0f}% "
+              f"vs baseline, SLO met on {100 * gate['engine_slo_met']:.0f}%): "
+              f"{p99s}")
+        return 0
     if args.collectives:
         failures = compare_collectives(baseline, fresh)
         if failures:

@@ -45,7 +45,11 @@ CHECKER = "locks"
 
 # The files whose lock discipline is machine-checked. Annotation comments
 # anywhere else are honored too if the file is passed explicitly.
-DEFAULT_FILES = ("src/repro/ps/runtime.py", "src/repro/serving/forest_server.py")
+DEFAULT_FILES = (
+    "src/repro/ps/runtime.py",
+    "src/repro/serving/forest_server.py",
+    "src/repro/serving/continuous.py",
+)
 
 _GUARDED_RE = re.compile(r"#\s*guarded-by:\s*([A-Za-z_][\w.]*)")
 _HOLDS_RE = re.compile(r"#\s*holds-lock:\s*([A-Za-z_][\w.]*)")

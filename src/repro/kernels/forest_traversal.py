@@ -37,15 +37,18 @@ from jax.experimental.pallas import tpu as pltpu
 def _traverse_kernel(
     bins_ref,  # (S_blk, F) int32
     feat_ref,  # (n_int, T_blk) int32 — transposed tree arrays
-    thr_ref,  # (n_int, T_blk) int32
-    leaf_ref,  # (n_leaf, T_blk) f32
-    ntree_ref,  # (1, 1) int32 in SMEM — live-slot count
-    out_ref,  # (S_blk, n_outputs) f32 — accumulated over tree blocks
-    *,
+    thr_ref,  # (n_int, T_blk) int32 — or int8/int16 quantized
+    leaf_ref,  # (n_leaf, T_blk) f32 — or int8/fp16 quantized
+    *rest,  # [scale_ref (1, T_blk) f32 when qmode='int8'], ntree_ref, out_ref
     depth: int,
     tree_block: int,
     n_outputs: int,
+    qmode: str,
 ):
+    if qmode == "int8":
+        scale_ref, ntree_ref, out_ref = rest
+    else:
+        (ntree_ref, out_ref), scale_ref = rest, None
     tb = pl.program_id(1)
 
     @pl.when(tb == 0)
@@ -55,6 +58,17 @@ def _traverse_kernel(
     bins = bins_ref[...]
     feat = feat_ref[...]
     thr = thr_ref[...]
+    # Dequantize-in-VMEM epilogue (DESIGN.md §17): quantized blocks travel
+    # HBM->VMEM packed (4x fewer bytes for int8) and widen on-chip once
+    # per block, before the gathers. On the f32/int32 layout both converts
+    # are same-dtype no-ops, so that path's program is unchanged.
+    if qmode != "none":
+        thr = thr.astype(jnp.int32)
+    leaf = leaf_ref[...]
+    if qmode == "int8":
+        leaf = leaf.astype(jnp.float32) * scale_ref[...]  # (n_leaf, T_blk)
+    elif qmode == "fp16":
+        leaf = leaf.astype(jnp.float32)
     s_blk = bins.shape[0]
 
     # Depth-unrolled heap descent, all (sample, tree) pairs at once.
@@ -65,8 +79,8 @@ def _traverse_kernel(
         v = jnp.take_along_axis(bins, f, axis=1)  # (S, T) sample bins
         node = 2 * node + 1 + (v > t).astype(jnp.int32)
 
-    leaf = node - ((1 << depth) - 1)
-    vals = jnp.take_along_axis(leaf_ref[...], leaf, axis=0)  # (S, T)
+    leaf_idx = node - ((1 << depth) - 1)
+    vals = jnp.take_along_axis(leaf, leaf_idx, axis=0)  # (S, T)
     tree_idx = tb * tree_block + jax.lax.broadcasted_iota(
         jnp.int32, vals.shape, 1
     )
@@ -93,19 +107,23 @@ def _traverse_kernel(
 def forest_traverse_pallas(
     bins: jax.Array,  # (N, F) int32 — N % sample_block == 0 (wrapper pads)
     feature: jax.Array,  # (T, 2^d - 1) int32 — T % tree_block == 0
-    threshold: jax.Array,  # (T, 2^d - 1) int32
-    leaf_value: jax.Array,  # (T, 2^d) f32
+    threshold: jax.Array,  # (T, 2^d - 1) int32 — or int8/int16 quantized
+    leaf_value: jax.Array,  # (T, 2^d) f32 — or int8/fp16 quantized
     n_trees: jax.Array,  # () int32 — live slots; slots >= n_trees add 0
     depth: int,
     sample_block: int = 256,
     tree_block: int = 512,
     interpret: bool | None = None,
     n_outputs: int = 1,
+    leaf_scale: jax.Array | None = None,  # (T,) f32 — int8 mode only
 ) -> jax.Array:
     """Masked forest sum (N,) f32 — or (N, K) with ``n_outputs`` = K > 1,
     where slot t reduces into output column t % K. See module docstring.
 
-    ``interpret=None`` auto-detects (Mosaic on TPU, interpreter elsewhere).
+    Quantized forests (int8 leaves + ``leaf_scale``, or fp16 leaves) ride
+    the same grid with a dequantize-in-VMEM epilogue; the f32 layout lowers
+    the exact historical program. ``interpret=None`` auto-detects (Mosaic
+    on TPU, interpreter elsewhere).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -115,6 +133,30 @@ def forest_traverse_pallas(
     assert n % sample_block == 0, "wrapper must pad samples"
     assert t % tree_block == 0, "wrapper must pad trees"
     ns, nt = n // sample_block, t // tree_block
+    if leaf_value.dtype == jnp.int8:
+        qmode = "int8"
+        assert leaf_scale is not None, "int8 leaves need leaf_scale"
+    elif leaf_value.dtype == jnp.float16:
+        qmode = "fp16"
+    else:
+        qmode = "none"
+
+    in_specs = [
+        pl.BlockSpec((sample_block, f), lambda sb, tb: (sb, 0)),
+        pl.BlockSpec((n_int, tree_block), lambda sb, tb: (0, tb)),
+        pl.BlockSpec((n_int, tree_block), lambda sb, tb: (0, tb)),
+        pl.BlockSpec((n_leaf, tree_block), lambda sb, tb: (0, tb)),
+    ]
+    operands = [bins, feature.T, threshold.T, leaf_value.T]
+    if qmode == "int8":
+        # Per-tree dequant scales ride VMEM next to the leaf block they
+        # rescale — (1, tree_block) per grid step, broadcast on-chip.
+        in_specs.append(pl.BlockSpec((1, tree_block), lambda sb, tb: (0, tb)))
+        operands.append(leaf_scale.reshape(1, t).astype(jnp.float32))
+    in_specs.append(
+        pl.BlockSpec((1, 1), lambda sb, tb: (0, 0), memory_space=pltpu.SMEM)
+    )
+    operands.append(jnp.asarray(n_trees, jnp.int32).reshape(1, 1))
 
     out = pl.pallas_call(
         functools.partial(
@@ -122,23 +164,12 @@ def forest_traverse_pallas(
             depth=depth,
             tree_block=tree_block,
             n_outputs=n_outputs,
+            qmode=qmode,
         ),
         grid=(ns, nt),
-        in_specs=[
-            pl.BlockSpec((sample_block, f), lambda sb, tb: (sb, 0)),
-            pl.BlockSpec((n_int, tree_block), lambda sb, tb: (0, tb)),
-            pl.BlockSpec((n_int, tree_block), lambda sb, tb: (0, tb)),
-            pl.BlockSpec((n_leaf, tree_block), lambda sb, tb: (0, tb)),
-            pl.BlockSpec((1, 1), lambda sb, tb: (0, 0), memory_space=pltpu.SMEM),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((sample_block, n_outputs), lambda sb, tb: (sb, 0)),
         out_shape=jax.ShapeDtypeStruct((n, n_outputs), jnp.float32),
         interpret=interpret,
-    )(
-        bins,
-        feature.T,
-        threshold.T,
-        leaf_value.T,
-        jnp.asarray(n_trees, jnp.int32).reshape(1, 1),
-    )
+    )(*operands)
     return out[:, 0] if n_outputs == 1 else out

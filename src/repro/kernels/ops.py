@@ -421,6 +421,7 @@ def forest_traverse(
     sample_block: int = 256,
     tree_block: int = 512,
     n_outputs: int = 1,
+    leaf_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Masked forest sum (N,) f32 — the serving predict. See forest_traversal.py.
 
@@ -431,13 +432,19 @@ def forest_traverse(
     K > 1 the result is (N, K): slot t reduces into output column t % K
     (padded tree slots are masked by ``n_trees``, so padding never leaks
     into any output column).
+
+    Quantized layouts (``trees.forest.Forest.quantize``) pass int8/int16
+    thresholds and int8/fp16 leaves — int8 with the per-tree ``leaf_scale``.
+    Both backends dequantize with identical float ops, and scores stay
+    within ``trees.forest.quantization_atol`` of the f32 forest's; with f32
+    inputs the dequant converts are no-ops and the path is bitwise-unchanged.
     """
     backend = resolve_backend(backend)
     n_trees = jnp.asarray(n_trees, jnp.int32)
     if backend == "ref":
         return _ref.apply_forest_ref(
             bins, feature, threshold, leaf_value, depth, n_trees,
-            n_outputs=n_outputs,
+            n_outputs=n_outputs, leaf_scale=leaf_scale,
         )
     from repro.kernels.forest_traversal import forest_traverse_pallas
 
@@ -449,11 +456,12 @@ def forest_traverse(
     binsp = _pad_to(bins, sb, 0, 0)
     featp = _pad_to(feature, tb, 0, 0)
     thrp = _pad_to(threshold, tb, 0, 0)
-    leafp = _pad_to(leaf_value, tb, 0, 0.0)
+    leafp = _pad_to(leaf_value, tb, 0, 0 if leaf_value.dtype == jnp.int8 else 0.0)
+    scalep = None if leaf_scale is None else _pad_to(leaf_scale, tb, 0, 1.0)
     out = forest_traverse_pallas(
         binsp, featp, thrp, leafp, n_trees, depth,
         sample_block=sb, tree_block=tb, interpret=interpret,
-        n_outputs=n_outputs,
+        n_outputs=n_outputs, leaf_scale=scalep,
     )
     return out[:n]
 

@@ -251,15 +251,35 @@ def _tree_leaf_values(
     return jnp.take(leaves, node - ((1 << depth) - 1))
 
 
+def _dequantize_forest(
+    threshold: jax.Array, leaf_value: jax.Array, leaf_scale: jax.Array | None
+) -> tuple[jax.Array, jax.Array]:
+    """Quantized-layout prologue shared by both traversal oracles.
+
+    The reference semantics of the kernel's dequantize-in-VMEM epilogue:
+    int8 leaves scale back through the per-tree f32 ``leaf_scale``, fp16
+    leaves cast exactly, quantized thresholds widen to int32. On f32/int32
+    inputs both converts are same-dtype no-ops, so the unquantized path
+    stays BITWISE-identical to the historical one.
+    """
+    leaf = leaf_value.astype(jnp.float32)
+    if leaf_value.dtype == jnp.int8:
+        if leaf_scale is None:
+            raise ValueError("int8 leaf_value needs a per-tree leaf_scale")
+        leaf = leaf * leaf_scale[:, None]
+    return threshold.astype(jnp.int32), leaf
+
+
 @functools.partial(jax.jit, static_argnames=("depth", "n_outputs"))
 def forest_traverse_ref(
     bins: jax.Array,  # (N, F) int32
     feature: jax.Array,  # (T, 2^d - 1) int32
-    threshold: jax.Array,  # (T, 2^d - 1) int32
-    leaf_value: jax.Array,  # (T, 2^d) f32
+    threshold: jax.Array,  # (T, 2^d - 1) int32 — or int8/int16 quantized
+    leaf_value: jax.Array,  # (T, 2^d) f32 — or int8/fp16 quantized
     n_trees: jax.Array,  # () int32 — live slots
     depth: int,
     n_outputs: int = 1,
+    leaf_scale: jax.Array | None = None,  # (T,) f32, int8 mode only
 ) -> jax.Array:
     """Masked forest sum, (N,) f32 — the traversal kernel's oracle.
 
@@ -273,7 +293,13 @@ def forest_traverse_ref(
 
     With ``n_outputs`` = K > 1, slot t belongs to output t % K (the
     forest's round-major/output-minor layout) and the result is (N, K).
+
+    Quantized forests (``Forest.quantize``) pass their packed
+    threshold/leaf arrays plus ``leaf_scale``; the oracle dequantizes up
+    front (``_dequantize_forest``), which is the reference for the
+    kernel's in-VMEM epilogue — interpret-mode parity stays bitwise.
     """
+    threshold, leaf_value = _dequantize_forest(threshold, leaf_value, leaf_scale)
     per_tree = jax.vmap(
         lambda feat, thr, leaves: _tree_leaf_values(bins, feat, thr, leaves, depth)
     )(feature, threshold, leaf_value)  # (T, N)
@@ -290,11 +316,12 @@ def forest_traverse_ref(
 def apply_forest_ref(
     bins: jax.Array,  # (N, F) int32
     feature: jax.Array,  # (T, 2^d - 1) int32
-    threshold: jax.Array,  # (T, 2^d - 1) int32
-    leaf_value: jax.Array,  # (T, 2^d) f32
+    threshold: jax.Array,  # (T, 2^d - 1) int32 — or int8/int16 quantized
+    leaf_value: jax.Array,  # (T, 2^d) f32 — or int8/fp16 quantized
     depth: int,
     n_trees: jax.Array | None = None,  # () int32; None = all slots live
     n_outputs: int = 1,
+    leaf_scale: jax.Array | None = None,  # (T,) f32, int8 mode only
 ) -> jax.Array:
     """Sum of per-tree predictions, (N,) f32 — the forest F(x) evaluation.
 
@@ -303,8 +330,10 @@ def apply_forest_ref(
     contribute exactly 0 (same masking contract as ``forest_traverse_ref``;
     on zero-padded training forests the two agree either way). With
     ``n_outputs`` = K > 1, slot t accumulates into output column t % K
-    and the result is (N, K).
+    and the result is (N, K). Quantized forests dequantize up front
+    (outside the scan), same as ``forest_traverse_ref``.
     """
+    threshold, leaf_value = _dequantize_forest(threshold, leaf_value, leaf_scale)
 
     def one_tree(carry, tree):
         total, idx = carry

@@ -12,6 +12,13 @@ the newest checkpoint between waves:
     PYTHONPATH=src python -m repro.launch.serve --arch gbdt \
         --trees 60 --requests 12 [--rows 64] [--workers 8] \
         [--objective logistic|multiclass:3|...]
+
+``--engine continuous`` serves the same traffic through the
+continuous-batching ``ForestEngine`` instead: the mid-training and final
+checkpoints load as two named versions, traffic A/B-splits between them
+by uid hash, and per-request p50/p99 queue+compute latency is reported
+against ``--slo-ms``. ``--quantize int8|fp16`` packs the served forests
+(both engines) with the documented score-error bound.
 """
 from __future__ import annotations
 
@@ -41,7 +48,13 @@ def run_gbdt(args) -> None:
     from repro.core.sgbdt import SGBDTConfig
     from repro.objectives import get_objective
     from repro.ps import Trainer
-    from repro.serving import ForestServer, PredictRequest, load_forest_checkpoint
+    from repro.serving import (
+        ForestEngine,
+        ForestServer,
+        PredictRequest,
+        load_forest_checkpoint,
+        percentile_latencies,
+    )
     from repro.trees.binning import bin_dataset
     from repro.trees.learner import LearnerConfig
 
@@ -82,6 +95,62 @@ def run_gbdt(args) -> None:
     )
     ckpt.maybe_save(args.trees, state)  # idempotent when half divides trees
 
+    quantize = None if args.quantize == "none" else args.quantize
+    reqs = [
+        PredictRequest(
+            uid=i,
+            x=rng.standard_normal((int(rng.integers(1, args.rows // 2 + 1)), dim))
+            .astype(np.float32),
+        )
+        for i in range(args.requests)
+    ]
+
+    if args.engine == "continuous":
+        # Two checkpoints, two live versions: traffic A/B-splits by uid
+        # hash, each result labeled with its version and that version's
+        # own model_step.
+        eng = ForestEngine(
+            data.bin_edges, max_rows=args.rows, slo_s=args.slo_ms / 1e3
+        )
+        eng.add_version(
+            "half", load_forest_checkpoint(ckpt_dir, half),
+            model_step=half, objective=obj, quantize=quantize,
+        )
+        t0 = time.time()
+        first = eng.run(reqs[: args.requests // 2])
+        eng.add_version(
+            "full", load_forest_checkpoint(ckpt_dir, args.trees),
+            model_step=args.trees, objective=obj, quantize=quantize,
+            weight=3.0,  # ramp the new version to 75% of the split
+        )
+        second = eng.run(reqs[args.requests // 2:])
+        dt = time.time() - t0
+        outs = first + second
+        rows = sum(len(r.scores) for r in outs)
+        split: dict[str, int] = {}
+        for r in second:
+            split[r.version] = split.get(r.version, 0) + 1
+        stats = percentile_latencies(outs)
+        print(f"continuous engine: served {len(outs)} requests / {rows} rows "
+              f"in {dt:.2f}s (quantize={quantize or 'off'}); "
+              f"post-ramp A/B split {split}")
+        print(f"  latency p50/p99: queue {stats['queue_p50_ms']:.2f}/"
+              f"{stats['queue_p99_ms']:.2f} ms, compute "
+              f"{stats['compute_p50_ms']:.2f}/{stats['compute_p99_ms']:.2f} ms,"
+              f" end-to-end {stats['latency_p50_ms']:.2f}/"
+              f"{stats['latency_p99_ms']:.2f} ms (SLO {args.slo_ms:.0f} ms)")
+        for r in outs[:3]:
+            print(f"  req {r.uid}: {len(r.scores)} rows, "
+                  f"version={r.version}, model_step={r.model_step}, "
+                  f"scores[:4]={np.round(r.scores[:4], 4).tolist()}")
+        assert {r.model_step for r in first} == {half}
+        assert all(
+            r.model_step == (half if r.version == "half" else args.trees)
+            for r in second
+        )
+        assert all(np.isfinite(r.scores).all() for r in outs), "non-finite"
+        return
+
     # Serve from the mid-training (partially-filled) checkpoint first; the
     # checkpoint root is attached only after the first batch so the demo
     # shows both model versions answering live traffic.
@@ -91,15 +160,8 @@ def run_gbdt(args) -> None:
         max_rows=args.rows,
         model_step=half,
         objective=obj,
+        quantize=quantize,
     )
-    reqs = [
-        PredictRequest(
-            uid=i,
-            x=rng.standard_normal((int(rng.integers(1, args.rows // 2 + 1)), dim))
-            .astype(np.float32),
-        )
-        for i in range(args.requests)
-    ]
     t0 = time.time()
     first = server.run(reqs[: args.requests // 2])
     server.ckpt_root = ckpt_dir
@@ -110,7 +172,7 @@ def run_gbdt(args) -> None:
     rows = sum(len(r.scores) for r in outs)
     print(f"served {len(outs)} requests / {rows} rows in {dt:.2f}s "
           f"({rows / dt:,.0f} rows/s incl. compile) over "
-          f"{server.waves_served} waves")
+          f"{server.waves_served} waves (quantize={quantize or 'off'})")
     step_before = first[-1].model_step if first else half
     print(f"hot swap: step {step_before} -> {server.model_step} "
           f"(reloaded={swapped})")
@@ -143,6 +205,16 @@ def main() -> None:
     ap.add_argument("--objective", default="logistic",
                     help="GBDT objective spec; served outputs go through "
                          "its link (e.g. multiclass:3 -> softmax rows)")
+    ap.add_argument("--engine", default="wave",
+                    choices=["wave", "continuous"],
+                    help="wave: drain-the-queue ForestServer demo; "
+                         "continuous: multi-version SLO-cutting ForestEngine")
+    ap.add_argument("--quantize", default="none",
+                    choices=["none", "int8", "fp16"],
+                    help="serve a quantized forest payload (documented "
+                         "score-error bound, 4x/2x smaller VMEM blocks)")
+    ap.add_argument("--slo-ms", type=float, default=50.0,
+                    help="latency SLO for continuous-engine wave cutting")
     args = ap.parse_args()
 
     if args.arch == "gbdt":

@@ -6,13 +6,17 @@ from repro.serving.forest_server import (
     PredictResult,
     load_forest_checkpoint,
 )
+from repro.serving.continuous import ForestEngine, percentile_latencies, route_hash
 
 __all__ = [
     "Completion",
     "Request",
     "ServingEngine",
     "ForestServer",
+    "ForestEngine",
     "PredictRequest",
     "PredictResult",
     "load_forest_checkpoint",
+    "percentile_latencies",
+    "route_hash",
 ]

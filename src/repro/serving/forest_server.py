@@ -2,20 +2,28 @@
 
 The inference half of the paper's system: the parameter server trains a
 forest (``repro.ps``), checkpoints its ``TrainState``, and this module
-serves it. Three contracts (DESIGN.md §6a):
+serves it. Contracts (DESIGN.md §6a, §17):
 
 - **Wave batching** — the queue pattern of ``serving.engine``: variable-size
   prediction requests (each a block of rows) are packed row-wise into
   fixed-capacity waves of ``max_rows`` and padded to ONE static shape, so
   every wave hits the same jitted predict and there is exactly one compile.
+  Requests larger than ``max_rows`` are split into sub-waves internally and
+  reassembled under the original uid — callers never see the wave geometry.
 - **Serve-time binning** — requests carry *raw float* features; the jitted
   predict applies the training-time quantile edges (``BinnedData.bin_edges``
   via ``trees.binning.apply_bins``) before traversal, so serving sees
   exactly the bins training saw.
-- **Hot swap** — between waves the server polls the checkpoint directory
-  for a newer step and swaps the forest atomically (the forest is a jit
-  *argument*, not a captured constant, so a swap is just a new pytree with
-  the same shapes: zero retrace, zero downtime).
+- **Hot swap** — the server polls the checkpoint directory for a newer step
+  and swaps the forest atomically (the forest is a jit *argument*, not a
+  captured constant, so a swap is just a new pytree with the same shapes:
+  zero retrace, zero downtime). Swap lag is bounded: ``maybe_reload`` runs
+  every ``reload_every_waves`` waves from the serving path itself, and
+  ``start_reload_poller`` adds a wall-clock-bounded background poller for
+  idle servers.
+- **Quantized serving** — ``quantize='int8'|'fp16'`` installs
+  ``Forest.quantize`` payloads (checkpoint reloads re-quantize on install);
+  scores stay within ``trees.quantization_atol`` of the f32 forest's.
 """
 from __future__ import annotations
 
@@ -51,19 +59,41 @@ def load_forest_checkpoint(
     """Restore a ``Forest`` from a checkpoint written by the training loop.
 
     Works on both bare-``Forest`` checkpoints (leaf paths ``.feature`` ...)
-    and full ``TrainState`` checkpoints (``.forest/.feature`` ...): leaves
-    are matched by their trailing field name, so the server never needs the
-    training-set-sized ``f`` vector to rebuild its template. With ``like``,
-    shapes are validated against the serving template (capacity and depth
-    are static for the jit cache).
+    and full ``TrainState`` checkpoints (``.forest/.feature`` ...), so the
+    server never needs the training-set-sized ``f`` vector to rebuild its
+    template. Leaves are matched by trailing field name; when several
+    leaves end in the same field (a state with both ``forest`` and, say, an
+    EMA ``shadow_forest``), the one whose *parent* segment is ``forest`` is
+    preferred, and anything still ambiguous raises instead of silently
+    picking manifest order. With ``like``, shapes are validated against the
+    serving template (capacity and depth are static for the jit cache).
     """
     d = checkpoint.step_dir(root, step)
     manifest = json.loads((d / "manifest.json").read_text())
-    found: dict[str, np.ndarray] = {}
+    candidates: dict[str, list[tuple[list[str], dict]]] = {
+        f: [] for f in _FOREST_FIELDS
+    }
     for entry in manifest["leaves"]:
-        field = entry["path"].split("/")[-1].lstrip(".")
-        if field in _FOREST_FIELDS:
-            found[field] = np.load(d / entry["file"])
+        # Path segments come from tree_flatten_with_path: ".forest" for
+        # attributes, "['forest']" for dict keys — normalize both.
+        segs = [s.strip(".[]'\"") for s in entry["path"].split("/")]
+        if segs[-1] in candidates:
+            candidates[segs[-1]].append((segs, entry))
+    found: dict[str, np.ndarray] = {}
+    for field, cands in candidates.items():
+        if len(cands) > 1:
+            preferred = [c for c in cands if len(c[0]) > 1 and c[0][-2] == "forest"]
+            if len(preferred) != 1:
+                paths = sorted(e["path"] for _, e in cands)
+                raise KeyError(
+                    f"checkpoint {d}: forest leaf {field!r} is ambiguous — "
+                    f"{len(cands)} leaves end in it ({paths}) and "
+                    f"{'none' if not preferred else 'several'} sit under a "
+                    "'forest' parent"
+                )
+            cands = preferred
+        if cands:
+            found[field] = np.load(d / cands[0][1]["file"])
     missing = [f for f in _FOREST_FIELDS if f not in found]
     if missing:
         raise KeyError(f"checkpoint {d} has no forest leaves {missing}")
@@ -89,6 +119,9 @@ def load_forest_checkpoint(
 class PredictRequest:
     uid: int
     x: np.ndarray  # (n, F) float32 — raw (unbinned) feature rows
+    # Engine routing (serving.continuous): pin this request to a named
+    # forest version; None lets the engine's A/B weights route it.
+    version: str | None = None
 
 
 @dataclasses.dataclass
@@ -96,7 +129,12 @@ class PredictResult:
     uid: int
     scores: np.ndarray  # (n,) raw margins — or (n, K) linked predictions
     model_step: int  # checkpoint step that served this request
-    latency_s: float  # wall time of the wave this request rode
+    latency_s: float  # end-to-end: queue_s + compute_s
+    queue_s: float = 0.0  # arrival -> first sub-wave starts computing
+    compute_s: float = 0.0  # summed wave compute across this uid's sub-waves
+    # Forest version that served this request (set by the continuous
+    # engine; a bare ForestServer leaves it None).
+    version: str | None = None
     # Row indices (within the request) that contained NaN/±inf features;
     # empty when the request was clean. Only populated in 'flag' mode —
     # 'reject' mode never admits such a request.
@@ -105,13 +143,40 @@ class PredictResult:
     )
 
 
+@dataclasses.dataclass
+class _Assembly:
+    """Per-request reassembly state for chunked (multi-part) requests.
+
+    All mutable fields are touched only under the server's ``_qlock`` —
+    parts of one request can ride waves run by different threads.
+    """
+
+    req: PredictRequest
+    x: np.ndarray  # validated float32 copy of req.x
+    arrival_s: float  # stamped in submit(), before any queueing
+    parts_left: int
+    scores: np.ndarray | None = None
+    model_step: int = -1
+    queue_s: float = -1.0  # < 0 until the first part starts computing
+    compute_s: float = 0.0
+
+
+@dataclasses.dataclass
+class _Part:
+    asm: _Assembly
+    lo: int  # row slice [lo, hi) of asm.x this part carries
+    hi: int
+
+
 class ForestServer:
     """Wave-batched GBDT inference with checkpoint hot-swap.
 
     ``forest`` is the serving template (its capacity/depth/output count fix
     the jit shapes); ``bin_edges`` are the training-time quantile edges.
-    With ``ckpt_root``, ``maybe_reload`` (called between waves and available
-    to callers) polls ``checkpoint.latest_step`` and swaps in newer forests.
+    With ``ckpt_root``, ``maybe_reload`` polls ``checkpoint.latest_step``
+    and swaps in newer forests; the serving path calls it every
+    ``reload_every_waves`` waves so swap lag is bounded in waves, and
+    ``start_reload_poller`` bounds it in wall-clock for idle servers.
 
     With ``objective`` (an ``Objective`` or registry spec string), the
     objective's ``link`` is applied INSIDE the jitted predict — served
@@ -119,12 +184,22 @@ class ForestServer:
     semantics (e.g. (rows, K) softmax rows for ``"multiclass:K"``).
     Without it, raw F(x) margins are served (the historical contract).
 
+    With ``quantize`` ('int8' or 'fp16'), the installed forest — initial
+    and every hot-swapped reload — is packed via ``Forest.quantize``; the
+    f32 template is kept for checkpoint shape validation. Served scores
+    stay within ``trees.quantization_atol`` of the f32 scores.
+
     Non-finite requests (``on_nonfinite``): training never sees NaN/±inf,
     so at serve time they are malformed input, not data. ``"reject"``
     (default) refuses the request in ``submit``; ``"flag"`` serves it —
     ``apply_bins`` clamps ±inf and routes NaN to its deterministic NaN bin
     — and reports the offending row indices in
     ``PredictResult.nonfinite_rows`` so the caller can discount them.
+
+    Thread discipline (repro.analysis.locks): the hot-swap pair
+    (``forest``/``model_step``) and the wave counter live under ``_lock``;
+    the part queue and reassembly state live under ``_qlock``. The two are
+    never held together.
     """
 
     def __init__(
@@ -138,21 +213,31 @@ class ForestServer:
         model_step: int = -1,
         objective: Objective | str | None = None,
         on_nonfinite: str = "reject",
+        reload_every_waves: int = 8,
+        quantize: str | None = None,
     ):
         if on_nonfinite not in ("reject", "flag"):
             raise ValueError(
                 f"on_nonfinite must be 'reject' or 'flag', got {on_nonfinite!r}"
             )
+        if reload_every_waves < 1:
+            raise ValueError("reload_every_waves must be >= 1")
         # The hot-swap pair must move together: a wave served with the new
         # forest but the old step (or vice versa) mislabels results. Both
         # live under `_lock`; repro.analysis.locks checks the discipline.
         self._lock = threading.Lock()
-        self.forest = forest  # guarded-by: self._lock
+        # Queue + reassembly state: submit/wave threads race on these.
+        self._qlock = threading.Lock()
+        self._template = forest  # f32 template for checkpoint validation
+        self._quantize = quantize
+        packed = forest.quantize(quantize) if quantize else forest
+        self.forest = packed  # guarded-by: self._lock
         self.bin_edges = jnp.asarray(bin_edges, jnp.float32)
         self.ckpt_root = ckpt_root
         self.max_rows = max_rows
         self.model_step = model_step  # guarded-by: self._lock
         self.on_nonfinite = on_nonfinite
+        self.reload_every_waves = reload_every_waves
         self.waves_served = 0  # guarded-by: self._lock
         self.objective = get_objective(objective) if objective is not None else None
         depth = forest.depth
@@ -166,29 +251,31 @@ class ForestServer:
                 f"forest serves {n_outputs}"
             )
 
-        def predict(forest: Forest, edges: jax.Array, x: jax.Array) -> jax.Array:
+        def predict(forest, edges: jax.Array, x: jax.Array) -> jax.Array:
             bins = apply_bins(x, edges)
             pred = ops.forest_traverse(
                 bins, forest.feature, forest.threshold, forest.leaf_value,
                 forest.n_trees, depth, backend=backend, n_outputs=n_outputs,
+                leaf_scale=getattr(forest, "leaf_scale", None),
             )
             raw = forest.base_score + pred
             return raw if obj is None else obj.link(raw)
 
         self._predict = jax.jit(predict)
-        self._queue: collections.deque[PredictRequest] = collections.deque()
+        self._queue: collections.deque[_Part] = collections.deque()  # guarded-by: self._qlock
+        self._poller: threading.Thread | None = None
+        self._poll_stop: threading.Event | None = None
 
-    def submit(self, req: PredictRequest) -> None:
+    def submit(self, req: PredictRequest) -> None:  # concurrent
+        """Validate and enqueue. Requests wider than ``max_rows`` are split
+        into sub-waves here and reassembled under the original uid; arrival
+        is stamped NOW, so reported ``queue_s`` includes every second the
+        request sits behind earlier traffic."""
         x = np.asarray(req.x, np.float32)
         if x.ndim != 2 or x.shape[1] != self.bin_edges.shape[0]:
             raise ValueError(
                 f"request {req.uid}: expected (n, {self.bin_edges.shape[0]}) "
                 f"features, got {x.shape}"
-            )
-        if x.shape[0] > self.max_rows:
-            raise ValueError(
-                f"request {req.uid}: {x.shape[0]} rows exceeds "
-                f"max_rows={self.max_rows}"
             )
         bad = _nonfinite_rows(x)
         if bad.size and self.on_nonfinite == "reject":
@@ -197,22 +284,58 @@ class ForestServer:
                 f"{bad.tolist()} (server runs on_nonfinite='reject'; "
                 f"use 'flag' to serve them with clamped/NaN-routed bins)"
             )
-        self._queue.append(req)
+        n = x.shape[0]
+        cuts = list(range(0, n, self.max_rows)) or [0]
+        asm = _Assembly(
+            req=req, x=x, arrival_s=time.perf_counter(), parts_left=len(cuts)
+        )
+        # All parts land under ONE lock acquisition: a draining wave thread
+        # can never observe a half-enqueued request (drain completeness).
+        with self._qlock:
+            for lo in cuts:
+                self._queue.append(_Part(asm, lo, min(lo + self.max_rows, n)))
 
     # ------------------------------------------------------------------ waves
-    def _next_wave(self) -> list[PredictRequest]:
-        """Pop queued requests while their rows fit in one ``max_rows`` wave."""
-        wave, rows = [], 0
-        while self._queue and rows + len(self._queue[0].x) <= self.max_rows:
-            req = self._queue.popleft()
-            wave.append(req)
-            rows += len(req.x)
-        return wave
+    def queued_rows(self) -> int:  # concurrent
+        """Rows currently waiting (the engine's fill-cut signal)."""
+        with self._qlock:
+            return sum(p.hi - p.lo for p in self._queue)
 
-    def _run_wave(self, wave: list[PredictRequest]) -> list[PredictResult]:  # concurrent
-        sizes = [len(r.x) for r in wave]
+    def oldest_wait(self, now: float | None = None) -> float:  # concurrent
+        """Seconds the head-of-line request has waited; 0.0 when idle.
+        The engine cuts a wave when this approaches the latency SLO."""
+        if now is None:
+            now = time.perf_counter()
+        with self._qlock:
+            if not self._queue:
+                return 0.0
+            return now - self._queue[0].asm.arrival_s
+
+    def _next_wave(self) -> list[_Part]:  # concurrent
+        """Pop queued parts while their rows fit in one ``max_rows`` wave."""
+        with self._qlock:
+            wave, rows = [], 0
+            while self._queue and rows + (
+                self._queue[0].hi - self._queue[0].lo
+            ) <= self.max_rows:
+                part = self._queue.popleft()
+                wave.append(part)
+                rows += part.hi - part.lo
+            return wave
+
+    def serve_next_wave(self) -> list[PredictResult]:  # concurrent
+        """Cut and serve one wave; returns results for every request whose
+        LAST part rode it (requests still missing parts stay pending)."""
+        wave = self._next_wave()
+        return self._run_wave(wave) if wave else []
+
+    def _run_wave(self, wave: list[_Part]) -> list[PredictResult]:  # concurrent
+        sizes = [p.hi - p.lo for p in wave]
         rows = np.zeros((self.max_rows, self.bin_edges.shape[0]), np.float32)
-        rows[: sum(sizes)] = np.concatenate([r.x for r in wave], axis=0)
+        if sum(sizes):
+            rows[: sum(sizes)] = np.concatenate(
+                [p.asm.x[p.lo : p.hi] for p in wave], axis=0
+            )
         # One consistent snapshot of the swap pair: every result in this
         # wave is labeled with the step of the forest that computed it,
         # even if a poller thread swaps mid-wave.
@@ -224,21 +347,45 @@ class ForestServer:
         dt = time.perf_counter() - t0
         with self._lock:
             self.waves_served += 1
+            waves = self.waves_served
         results, off = [], 0
-        for req, n in zip(wave, sizes):
-            results.append(
-                PredictResult(
-                    uid=req.uid,
-                    scores=scores[off : off + n],
-                    model_step=model_step,
-                    latency_s=dt,
-                    # Recomputed per request at serve time (cheap: <=
-                    # max_rows rows) — no uid-keyed bookkeeping to go
-                    # stale on duplicate uids or abandoned queue entries.
-                    nonfinite_rows=_nonfinite_rows(np.asarray(req.x, np.float32)),
-                )
-            )
+        for part, n in zip(wave, sizes):
+            asm = part.asm
+            with self._qlock:
+                if asm.scores is None:
+                    asm.scores = np.zeros(
+                        (asm.x.shape[0],) + scores.shape[1:], scores.dtype
+                    )
+                if asm.queue_s < 0:
+                    asm.queue_s = t0 - asm.arrival_s
+                asm.scores[part.lo : part.hi] = scores[off : off + n]
+                asm.compute_s += dt
+                # max, not last: with concurrent wave threads, "the step
+                # that served this request" is the newest forest any of
+                # its parts saw.
+                asm.model_step = max(asm.model_step, model_step)
+                asm.parts_left -= 1
+                if asm.parts_left == 0:
+                    results.append(
+                        PredictResult(
+                            uid=asm.req.uid,
+                            scores=asm.scores,
+                            model_step=asm.model_step,
+                            latency_s=asm.queue_s + asm.compute_s,
+                            queue_s=asm.queue_s,
+                            compute_s=asm.compute_s,
+                            # Recomputed on the FULL request at assembly
+                            # time (cheap) — indices are request-relative
+                            # regardless of how the rows were chunked.
+                            nonfinite_rows=_nonfinite_rows(asm.x),
+                        )
+                    )
             off += n
+        if waves % self.reload_every_waves == 0:
+            # Bounded-lag hot swap: the serving path itself polls, so a
+            # busy server can never fall more than reload_every_waves
+            # waves behind the newest checkpoint.
+            self.maybe_reload()
         return results
 
     # --------------------------------------------------------------- hot swap
@@ -252,10 +399,12 @@ class ForestServer:
             return False
         step = checkpoint.latest_step(self.ckpt_root)
         with self._lock:
-            template, current = self.forest, self.model_step
+            current = self.model_step
         if step is None or step <= current:
             return False
-        forest = load_forest_checkpoint(self.ckpt_root, step, like=template)
+        forest = load_forest_checkpoint(self.ckpt_root, step, like=self._template)
+        if self._quantize:
+            forest = forest.quantize(self._quantize)
         with self._lock:
             if step <= self.model_step:
                 return False
@@ -263,16 +412,43 @@ class ForestServer:
             self.model_step = step
         return True
 
+    def start_reload_poller(self, interval_s: float = 0.05) -> None:
+        """Wall-clock-bounded hot swap: a daemon thread polls the
+        checkpoint root every ``interval_s`` even when no waves are being
+        served, so swap lag is bounded for idle/bursty servers too."""
+        if self._poller is not None:
+            return
+        stop = threading.Event()
+
+        def _poll():  # concurrent
+            while not stop.wait(interval_s):
+                self.maybe_reload()
+
+        self._poll_stop = stop
+        self._poller = threading.Thread(
+            target=_poll, name="forest-reload-poller", daemon=True
+        )
+        self._poller.start()
+
+    def stop_reload_poller(self) -> None:
+        if self._poller is None:
+            return
+        assert self._poll_stop is not None
+        self._poll_stop.set()
+        self._poller.join()
+        self._poller = None
+        self._poll_stop = None
+
     def run(
         self, requests: Iterable[PredictRequest] | None = None
     ) -> list[PredictResult]:
         for r in requests or ():
             self.submit(r)
         done: list[PredictResult] = []
-        while self._queue:
+        while True:
             self.maybe_reload()
             wave = self._next_wave()
             if not wave:
-                break
+                break  # parts never exceed max_rows: empty wave == drained
             done.extend(self._run_wave(wave))
         return sorted(done, key=lambda r: r.uid)

@@ -19,7 +19,14 @@ from repro.trees.tree import (
     empty_tree,
     tree_num_nodes,
 )
-from repro.trees.forest import Forest, empty_forest, forest_predict, forest_push
+from repro.trees.forest import (
+    Forest,
+    QuantizedForest,
+    empty_forest,
+    forest_predict,
+    forest_push,
+    quantization_atol,
+)
 from repro.trees.learner import LearnerConfig, build_tree, build_tree_multi
 
 __all__ = [
@@ -38,6 +45,8 @@ __all__ = [
     "empty_tree",
     "tree_num_nodes",
     "Forest",
+    "QuantizedForest",
+    "quantization_atol",
     "empty_forest",
     "forest_predict",
     "forest_push",

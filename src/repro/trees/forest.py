@@ -38,6 +38,117 @@ class Forest(NamedTuple):
     def n_outputs(self) -> int:
         return int(self.base_score.shape[-1]) if self.base_score.ndim else 1
 
+    def quantize(self, mode: str = "int8") -> "QuantizedForest":
+        """Pack the serving payload into a quantized layout (DESIGN.md §17).
+
+        The traversal kernel's VMEM footprint is dominated by the
+        ``threshold``/``leaf_value`` blocks (the forest-size ceiling the
+        ROADMAP names); quantizing them cuts the resident bytes 4x (int8)
+        or 2x (fp16) with a *documented* score error bound
+        (``quantization_atol``). Modes:
+
+        - ``"int8"`` — thresholds are bin ids, exact in int8 (requires
+          ``n_bins <= 128``; raises otherwise); leaves store
+          ``round(leaf / scale)`` with one f32 ``scale = max|leaf| / 127``
+          per tree, so per-sample error is at most ``sum_t scale_t / 2``.
+        - ``"fp16"`` — thresholds exact in int16, leaves rounded to
+          float16 (error at most ``sum_t max|leaf_t| * 2^-11``).
+
+        Dead slots (>= ``n_trees``) are masked at traversal time, so their
+        sentinel thresholds are zeroed rather than range-checked. This is
+        a host-side load/hot-swap-time operation, not a jit-traceable one.
+        """
+        if mode not in ("int8", "fp16"):
+            raise ValueError(f"quantize mode must be 'int8' or 'fp16', got {mode!r}")
+        slots = self.feature.shape[0]
+        live = jnp.arange(slots) < self.n_trees
+        thr = jnp.where(live[:, None], self.threshold, 0)
+        if mode == "fp16":
+            if int(jnp.max(thr)) > 32767:
+                raise ValueError("fp16 mode stores thresholds as int16: live "
+                                 "bin ids must be <= 32767")
+            return QuantizedForest(
+                feature=self.feature,
+                threshold=thr.astype(jnp.int16),
+                leaf_value=self.leaf_value.astype(jnp.float16),
+                leaf_scale=jnp.ones((slots,), jnp.float32),
+                n_trees=self.n_trees,
+                base_score=self.base_score,
+            )
+        if int(jnp.max(thr)) > 127:
+            raise ValueError(
+                "int8 mode stores thresholds as int8: live bin ids must be "
+                "<= 127 (use n_bins <= 128, or mode='fp16')"
+            )
+        peak = jnp.max(jnp.abs(self.leaf_value), axis=1)
+        scale = jnp.where(peak > 0, peak / 127.0, 1.0).astype(jnp.float32)
+        q = jnp.clip(
+            jnp.round(self.leaf_value / scale[:, None]), -127, 127
+        ).astype(jnp.int8)
+        return QuantizedForest(
+            feature=self.feature,
+            threshold=thr.astype(jnp.int8),
+            leaf_value=q,
+            leaf_scale=scale,
+            n_trees=self.n_trees,
+            base_score=self.base_score,
+        )
+
+
+class QuantizedForest(NamedTuple):
+    """A ``Forest`` with quantized traversal payload (``Forest.quantize``).
+
+    Same pytree discipline as ``Forest`` — pure arrays, so it rides as a
+    jit argument and hot-swaps without retrace. The mode is derived from
+    ``leaf_value.dtype`` (int8 -> per-tree-scaled int8, float16 -> fp16),
+    exactly like ``Forest`` derives ``n_outputs`` from ``base_score``.
+    """
+
+    feature: jax.Array  # (T, 2^d - 1) int32 — gather indices stay exact
+    threshold: jax.Array  # (T, 2^d - 1) int8 (int8 mode) or int16 (fp16)
+    leaf_value: jax.Array  # (T, 2^d) int8 or float16
+    leaf_scale: jax.Array  # (T,) f32 per-tree dequant scale (ones for fp16)
+    n_trees: jax.Array  # () int32 — live slots, same masking contract
+    base_score: jax.Array  # () or (K,) f32 — never quantized
+
+    @property
+    def depth(self) -> int:
+        return int(self.leaf_value.shape[-1]).bit_length() - 1
+
+    @property
+    def n_outputs(self) -> int:
+        return int(self.base_score.shape[-1]) if self.base_score.ndim else 1
+
+    @property
+    def mode(self) -> str:
+        return "int8" if self.leaf_value.dtype == jnp.int8 else "fp16"
+
+    def dequantize(self) -> Forest:
+        """The f32 forest the quantized payload encodes (dead-slot
+        thresholds come back as 0, which the ``n_trees`` mask makes
+        unobservable)."""
+        leaf = self.leaf_value.astype(jnp.float32)
+        if self.leaf_value.dtype == jnp.int8:
+            leaf = leaf * self.leaf_scale[:, None]
+        return Forest(
+            feature=self.feature,
+            threshold=self.threshold.astype(jnp.int32),
+            leaf_value=leaf,
+            n_trees=self.n_trees,
+            base_score=self.base_score,
+        )
+
+
+def quantization_atol(forest: Forest, quantized: QuantizedForest) -> float:
+    """The documented parity tolerance: |quantized score - f32 score| per
+    sample (any output column) is bounded by the sum over live trees of
+    each tree's worst leaf dequantization error — every sample reads
+    exactly one leaf per live tree."""
+    deq = quantized.dequantize()
+    err = jnp.max(jnp.abs(deq.leaf_value - forest.leaf_value), axis=1)
+    live = jnp.arange(forest.feature.shape[0]) < forest.n_trees
+    return float(jnp.sum(jnp.where(live, err, 0.0)))
+
 
 def empty_forest(capacity: int, depth: int, base_score=0.0, n_outputs: int = 1) -> Forest:
     """``capacity`` boosting rounds x ``n_outputs`` trees each."""
@@ -88,16 +199,21 @@ def forest_push(forest: Forest, tree: Tree, step_length: jax.Array) -> Forest:
     )
 
 
-def forest_predict(forest: Forest, bins: jax.Array, backend: str = "auto") -> jax.Array:
+def forest_predict(
+    forest: Forest | QuantizedForest, bins: jax.Array, backend: str = "auto"
+) -> jax.Array:
     """F(x) over binned inputs (N, F) -> (N,), or (N, K) for K-output
     forests. Slots >= n_trees predict 0.
 
     ``backend='auto'`` routes through the fused Pallas traversal kernel on
     TPU and the jnp oracle elsewhere (``kernels.ops.forest_traverse``).
+    Accepts a ``QuantizedForest`` too — the kernel dequantizes in VMEM
+    (scores within ``quantization_atol`` of the f32 forest's).
     """
     pred = ops.forest_traverse(
         bins, forest.feature, forest.threshold, forest.leaf_value,
         forest.n_trees, forest.depth, backend=backend,
         n_outputs=forest.n_outputs,
+        leaf_scale=getattr(forest, "leaf_scale", None),
     )
     return forest.base_score + pred

@@ -405,3 +405,152 @@ def test_kernel_interpret_default_autodetects(key):
     auto = histogram_pallas(bins, node, grad, hess, 4, 16)
     explicit = histogram_pallas(bins, node, grad, hess, 4, 16, interpret=True)
     np.testing.assert_array_equal(np.asarray(auto), np.asarray(explicit))
+
+
+# ----------------------------------------------------- quantized traversal
+def _quantized_case(key, n, f, n_bins, n_trees, depth, live):
+    from repro.trees.forest import Forest
+
+    bins, feat, thr, leaf = _rand_forest_case(key, n, f, n_bins, n_trees, depth)
+    forest = Forest(
+        feature=feat, threshold=thr, leaf_value=leaf,
+        n_trees=jnp.asarray(live, jnp.int32),
+        base_score=jnp.asarray(0.0, jnp.float32),
+    )
+    return bins, forest
+
+
+@pytest.mark.parametrize("mode", ["int8", "fp16"])
+@pytest.mark.parametrize("n,f,n_bins,n_trees,depth,live", FOREST_SWEEP)
+def test_quantized_traverse_within_documented_atol(
+    key, mode, n, f, n_bins, n_trees, depth, live
+):
+    """Quantized traversal (both backends) stays within the per-forest
+    tolerance ``quantization_atol`` documents: sum over live trees of the
+    worst leaf dequantization error."""
+    from repro.trees.forest import quantization_atol
+
+    bins, forest = _quantized_case(key, n, f, n_bins, n_trees, depth, live)
+    qf = forest.quantize(mode)
+    atol = quantization_atol(forest, qf)
+    base = np.asarray(
+        ref.forest_traverse_ref(
+            bins, forest.feature, forest.threshold, forest.leaf_value,
+            forest.n_trees, depth,
+        )
+    )
+    for backend in ("ref", "pallas"):
+        out = np.asarray(
+            ops.forest_traverse(
+                bins, qf.feature, qf.threshold, qf.leaf_value, qf.n_trees,
+                depth, backend=backend, leaf_scale=qf.leaf_scale,
+            )
+        )
+        assert np.max(np.abs(out - base), initial=0.0) <= atol + 1e-6, backend
+    if live == 0:
+        np.testing.assert_array_equal(base, np.zeros_like(base))
+
+
+@pytest.mark.parametrize("mode", ["int8", "fp16"])
+def test_quantized_traverse_pallas_bitwise_vs_oracle(key, mode):
+    """On the SAME quantized payload the interpret-mode kernel and the
+    vectorized oracle dequantize with identical float ops — bitwise."""
+    bins, forest = _quantized_case(key, 300, 10, 32, 17, 4, 9)
+    qf = forest.quantize(mode)
+    q_ref = ref.forest_traverse_ref(
+        bins, qf.feature, qf.threshold, qf.leaf_value, qf.n_trees, 4,
+        leaf_scale=qf.leaf_scale,
+    )
+    q_pal = ops.forest_traverse(
+        bins, qf.feature, qf.threshold, qf.leaf_value, qf.n_trees, 4,
+        backend="pallas", leaf_scale=qf.leaf_scale,
+    )
+    np.testing.assert_array_equal(np.asarray(q_ref), np.asarray(q_pal))
+
+
+@pytest.mark.parametrize("n,f,n_bins,n_trees,depth,live,k", MULTI_OUT_SWEEP)
+def test_quantized_multi_output_parity(key, n, f, n_bins, n_trees, depth, live, k):
+    """K-output quantized traversal keeps the per-column t % K contract
+    within the documented tolerance on both backends."""
+    from repro.trees.forest import quantization_atol
+
+    bins, forest = _quantized_case(key, n, f, n_bins, n_trees, depth, live)
+    qf = forest.quantize("int8")
+    atol = quantization_atol(forest, qf)
+    base = np.asarray(
+        ref.forest_traverse_ref(
+            bins, forest.feature, forest.threshold, forest.leaf_value,
+            forest.n_trees, depth, n_outputs=k,
+        )
+    )
+    for backend in ("ref", "pallas"):
+        out = np.asarray(
+            ops.forest_traverse(
+                bins, qf.feature, qf.threshold, qf.leaf_value, qf.n_trees,
+                depth, backend=backend, n_outputs=k, leaf_scale=qf.leaf_scale,
+            )
+        )
+        assert out.shape == (n, k)
+        assert np.max(np.abs(out - base), initial=0.0) <= atol + 1e-6, backend
+
+
+def test_f32_path_ignores_quantization_args(key):
+    """The f32 layout must lower the exact historical program: passing a
+    leaf_scale alongside f32 leaves changes nothing, bitwise."""
+    bins, feat, thr, leaf = _rand_forest_case(key, 256, 8, 32, 16, 4)
+    nt = jnp.asarray(11, jnp.int32)
+    plain = ops.forest_traverse(bins, feat, thr, leaf, nt, 4, backend="pallas")
+    scaled = ops.forest_traverse(
+        bins, feat, thr, leaf, nt, 4, backend="pallas",
+        leaf_scale=jnp.full((16,), 5.0, jnp.float32),
+    )
+    np.testing.assert_array_equal(np.asarray(plain), np.asarray(scaled))
+    plain_r = ops.forest_traverse(bins, feat, thr, leaf, nt, 4, backend="ref")
+    scaled_r = ops.forest_traverse(
+        bins, feat, thr, leaf, nt, 4, backend="ref",
+        leaf_scale=jnp.full((16,), 5.0, jnp.float32),
+    )
+    np.testing.assert_array_equal(np.asarray(plain_r), np.asarray(scaled_r))
+
+
+def test_quantize_roundtrip_and_mode(key):
+    """dequantize() inverts the packing to within the per-tree bound, dead
+    slots come back masked-safe, and the mode rides the dtype."""
+    _, forest = _quantized_case(key, 8, 6, 64, 10, 3, 7)
+    for mode in ("int8", "fp16"):
+        qf = forest.quantize(mode)
+        assert qf.mode == mode
+        deq = qf.dequantize()
+        live = np.arange(10) < 7
+        np.testing.assert_array_equal(
+            np.asarray(deq.feature), np.asarray(forest.feature)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(deq.threshold)[live], np.asarray(forest.threshold)[live]
+        )
+        np.testing.assert_array_equal(np.asarray(deq.threshold)[~live], 0)
+        if mode == "int8":
+            bound = np.asarray(qf.leaf_scale)[:, None] / 2 + 1e-7
+        else:
+            bound = np.abs(np.asarray(forest.leaf_value)) * 2.0**-11 + 1e-7
+        assert (
+            np.abs(np.asarray(deq.leaf_value) - np.asarray(forest.leaf_value))
+            <= bound
+        ).all()
+
+
+def test_quantize_range_checks(key):
+    """Bin ids that do not fit the packed threshold dtype must raise, and
+    unknown modes must raise — never silently wrap."""
+    _, forest = _quantized_case(key, 8, 6, 64, 4, 3, 4)
+    with pytest.raises(ValueError, match="int8|fp16"):
+        forest.quantize("int4")
+    wide = forest._replace(
+        threshold=forest.threshold.at[0, 0].set(200)  # n_bins > 128
+    )
+    with pytest.raises(ValueError, match="int8"):
+        wide.quantize("int8")
+    wide.quantize("fp16")  # 200 fits int16
+    huge = forest._replace(threshold=forest.threshold.at[0, 0].set(40000))
+    with pytest.raises(ValueError, match="int16"):
+        huge.quantize("fp16")

@@ -168,7 +168,7 @@ def test_forest_server_matches_forest_predict(gbdt_setup, backend):
 
 def test_forest_server_wave_packing(gbdt_setup):
     """Variable-size requests pack into max_rows waves; results keep uids
-    and per-request row counts; oversize submits are rejected."""
+    and per-request row counts; malformed feature shapes are rejected."""
     x, data, state, _ = gbdt_setup
     server = ForestServer(state.forest, data.bin_edges, max_rows=32)
     sizes = [10, 20, 5, 32, 1]
@@ -182,8 +182,6 @@ def test_forest_server_wave_packing(gbdt_setup):
     assert server.waves_served == 4  # greedy fill: [10+20], [5], [32], [1]
     solo = server.run([PredictRequest(uid=9, x=x[:10])])[0]
     np.testing.assert_array_equal(solo.scores, outs[0].scores)
-    with pytest.raises(ValueError, match="max_rows"):
-        server.submit(PredictRequest(uid=99, x=x[:33]))
     with pytest.raises(ValueError, match="features"):
         server.submit(PredictRequest(uid=99, x=x[:4, :5]))
 
@@ -275,3 +273,388 @@ def test_nonfinite_request_flag_mode(gbdt_setup):
     forced_small[1, 3] = -1e30
     small = server.run([PredictRequest(uid=2, x=forced_small)])[0]
     np.testing.assert_array_equal(out.scores[1], small.scores[1])
+
+
+# ------------------------------------------------- latency + chunking + reload
+def test_latency_includes_queue_wait(gbdt_setup):
+    """Regression: latency_s used to report only wave compute, hiding the
+    time a request sat behind earlier traffic. Arrival is stamped in
+    submit, so a pre-stuffed queue must show up in queue_s and latency_s."""
+    import time
+
+    x, data, state, _ = gbdt_setup
+    server = ForestServer(state.forest, data.bin_edges, max_rows=32)
+    server.run([PredictRequest(uid=0, x=x[:4])])  # warm the jit cache
+    server.submit(PredictRequest(uid=1, x=x[:8]))
+    server.submit(PredictRequest(uid=2, x=x[8:16]))
+    time.sleep(0.05)
+    outs = server.run()
+    assert len(outs) == 2
+    for r in outs:
+        assert r.queue_s >= 0.05
+        assert r.compute_s > 0
+        assert r.latency_s == pytest.approx(r.queue_s + r.compute_s)
+
+
+@pytest.mark.parametrize("rows_over", ["plus_one", "triple"])
+def test_oversized_request_chunked(gbdt_setup, rows_over):
+    """Requests wider than max_rows split into sub-waves internally and
+    reassemble under the original uid, row order preserved."""
+    x, data, state, _ = gbdt_setup
+    max_rows = 32
+    n = max_rows + 1 if rows_over == "plus_one" else 3 * max_rows
+    server = ForestServer(state.forest, data.bin_edges, max_rows=max_rows)
+    out = server.run([PredictRequest(uid=5, x=x[:n])])[0]
+    assert out.uid == 5 and out.scores.shape == (n,)
+    want = np.asarray(forest_predict(state.forest, data.bins[:n]))
+    np.testing.assert_allclose(out.scores, want, rtol=1e-6, atol=1e-6)
+    # a small rider packed behind the oversize request still serves
+    outs = server.run(
+        [PredictRequest(uid=1, x=x[:n]), PredictRequest(uid=2, x=x[n : n + 3])]
+    )
+    assert [r.uid for r in outs] == [1, 2]
+    np.testing.assert_allclose(outs[0].scores, want, rtol=1e-6, atol=1e-6)
+    assert len(outs[1].scores) == 3
+
+
+def test_oversized_request_preserves_nonfinite_rows(gbdt_setup):
+    """nonfinite_rows indices are request-relative even when the bad rows
+    land in different sub-waves."""
+    x, data, state, _ = gbdt_setup
+    server = ForestServer(
+        state.forest, data.bin_edges, max_rows=32, on_nonfinite="flag"
+    )
+    bad = x[:70].copy()
+    bad[2, 0] = np.nan  # first chunk
+    bad[40, 3] = np.inf  # second chunk
+    bad[69, 1] = -np.inf  # third chunk
+    out = server.run([PredictRequest(uid=0, x=bad)])[0]
+    assert out.nonfinite_rows.tolist() == [2, 40, 69]
+
+
+def test_empty_request_serves(gbdt_setup):
+    x, data, state, _ = gbdt_setup
+    server = ForestServer(state.forest, data.bin_edges, max_rows=32)
+    out = server.run([PredictRequest(uid=0, x=x[:0])])[0]
+    assert out.scores.shape == (0,)
+
+
+def test_reload_bound_mid_stream(gbdt_setup, tmp_path):
+    """A checkpoint written mid-stream must be serving within
+    reload_every_waves waves, even when the caller never polls."""
+    from repro.checkpoint import save_pytree
+
+    x, data, state, root = gbdt_setup
+    half = load_forest_checkpoint(root, N_TREES // 2)
+    save_pytree(tmp_path, 1, half)
+    server = ForestServer(
+        half, data.bin_edges, ckpt_root=tmp_path, max_rows=32,
+        model_step=1, reload_every_waves=2,
+    )
+    for i in range(8):
+        server.submit(PredictRequest(uid=i, x=x[32 * i : 32 * (i + 1)]))
+    wave_steps = []
+    for _ in range(2):
+        wave_steps.append(server.serve_next_wave()[0].model_step)
+    save_pytree(tmp_path, 2, state.forest)  # mid-stream checkpoint
+    while True:
+        res = server.serve_next_wave()
+        if not res:
+            break
+        wave_steps.append(res[0].model_step)
+    assert wave_steps[:2] == [1, 1]
+    first_new = wave_steps.index(2)
+    # the save landed after wave 2; the serving path itself must pick it
+    # up within reload_every_waves more waves
+    assert first_new <= 2 + server.reload_every_waves
+    assert wave_steps[-1] == 2
+    want = np.asarray(forest_predict(state.forest, data.bins[224:256]))
+    out = server.run([PredictRequest(uid=99, x=x[224:256])])[0]
+    np.testing.assert_allclose(out.scores, want, rtol=1e-6, atol=1e-6)
+
+
+def test_background_reload_poller_bounds_idle_lag(gbdt_setup, tmp_path):
+    """An idle server (no waves) still swaps within the poller interval."""
+    import time
+
+    from repro.checkpoint import save_pytree
+
+    x, data, state, root = gbdt_setup
+    half = load_forest_checkpoint(root, N_TREES // 2)
+    save_pytree(tmp_path, 1, half)
+    server = ForestServer(
+        half, data.bin_edges, ckpt_root=tmp_path, max_rows=32, model_step=1
+    )
+    server.start_reload_poller(interval_s=0.01)
+    try:
+        save_pytree(tmp_path, 2, state.forest)
+        deadline = time.perf_counter() + 5.0
+        while time.perf_counter() < deadline:
+            with server._lock:
+                step = server.model_step
+            if step == 2:
+                break
+            time.sleep(0.01)
+        assert step == 2  # swapped with zero waves served
+        assert server.waves_served == 0
+    finally:
+        server.stop_reload_poller()
+
+
+# --------------------------------------------------------- checkpoint matching
+def test_load_forest_checkpoint_prefers_forest_parent(gbdt_setup, tmp_path):
+    """When several leaves share a trailing field name, the one under a
+    'forest' parent wins — not manifest order."""
+    from repro.checkpoint import save_pytree
+
+    x, data, state, root = gbdt_setup
+    half = load_forest_checkpoint(root, N_TREES // 2)
+    # 'ema' sorts before 'forest': trailing-name-only matching would load
+    # the wrong leaves or trip on duplicates.
+    save_pytree(tmp_path, 1, {"ema": half, "forest": state.forest})
+    got = load_forest_checkpoint(tmp_path, 1, like=state.forest)
+    np.testing.assert_array_equal(
+        np.asarray(got.leaf_value), np.asarray(state.forest.leaf_value)
+    )
+    assert int(got.n_trees) == int(state.forest.n_trees)
+
+
+def test_load_forest_checkpoint_ambiguous_raises(gbdt_setup, tmp_path):
+    """Duplicate trailing fields with no 'forest' parent must raise, not
+    silently pick one."""
+    from repro.checkpoint import save_pytree
+
+    x, data, state, root = gbdt_setup
+    half = load_forest_checkpoint(root, N_TREES // 2)
+    save_pytree(tmp_path, 1, {"ema": half, "primary": state.forest})
+    with pytest.raises(KeyError, match="ambiguous"):
+        load_forest_checkpoint(tmp_path, 1)
+
+
+# ------------------------------------------------------------------- soak test
+def test_threaded_soak_no_torn_swap(gbdt_setup, tmp_path):
+    """Concurrent submit / wave-serve / hot-swap: every request completes
+    exactly once, every result's scores match the forest of its claimed
+    model_step (no torn forest/step pair), and each serving thread sees a
+    monotone model_step stream."""
+    import threading
+    import time
+
+    from repro.checkpoint import save_pytree
+
+    x, data, state, root = gbdt_setup
+    half = load_forest_checkpoint(root, N_TREES // 2)
+    save_pytree(tmp_path, 1, half)
+    server = ForestServer(
+        half, data.bin_edges, ckpt_root=tmp_path, max_rows=16,
+        model_step=1, reload_every_waves=4,
+    )
+    pred = {
+        1: np.asarray(forest_predict(half, data.bins)),
+        2: np.asarray(forest_predict(state.forest, data.bins)),
+    }
+    n_req, chunk = 60, 5
+    slices = [(chunk * i % 300, chunk * i % 300 + chunk) for i in range(n_req)]
+    done_submitting = threading.Event()
+    results: dict[int, list] = {0: [], 1: []}
+
+    def submitter(lo_uid, hi_uid):
+        for uid in range(lo_uid, hi_uid):
+            lo, hi = slices[uid]
+            server.submit(PredictRequest(uid=uid, x=x[lo:hi]))
+            time.sleep(0.001)
+
+    def server_thread(tid):
+        while True:
+            res = server.serve_next_wave()
+            results[tid].extend(res)
+            if not res:
+                if done_submitting.is_set() and server.queued_rows() == 0:
+                    return
+                time.sleep(0.002)
+
+    def swapper():
+        time.sleep(0.05)
+        save_pytree(tmp_path, 2, state.forest)
+
+    threads = [
+        threading.Thread(target=submitter, args=(0, n_req // 2)),
+        threading.Thread(target=submitter, args=(n_req // 2, n_req)),
+        threading.Thread(target=server_thread, args=(0,)),
+        threading.Thread(target=server_thread, args=(1,)),
+        threading.Thread(target=swapper),
+    ]
+    for t in threads[:2]:
+        t.start()
+    for t in threads[2:]:
+        t.start()
+    threads[0].join()
+    threads[1].join()
+    done_submitting.set()
+    for t in threads[2:]:
+        t.join()
+
+    everything = results[0] + results[1]
+    assert sorted(r.uid for r in everything) == list(range(n_req))
+    for r in everything:
+        assert r.model_step in (1, 2)
+        lo, hi = slices[r.uid]
+        np.testing.assert_allclose(
+            r.scores, pred[r.model_step][lo:hi], rtol=1e-5, atol=1e-5
+        )
+    for tid in (0, 1):  # per-thread swap snapshots only move forward
+        steps = [r.model_step for r in results[tid]]
+        assert steps == sorted(steps)
+
+
+# ------------------------------------------------------------ continuous engine
+@pytest.fixture(scope="module")
+def forest_engine_setup(gbdt_setup):
+    from repro.serving import ForestEngine
+
+    x, data, state, root = gbdt_setup
+    half = load_forest_checkpoint(root, N_TREES // 2, like=state.forest)
+    return x, data, state, half, ForestEngine
+
+
+def test_engine_ab_routing_and_per_version_steps(forest_engine_setup):
+    """Weighted deterministic A/B split over two live versions, each
+    result labeled with its version and that version's own model_step."""
+    x, data, state, half, ForestEngine = forest_engine_setup
+    eng = ForestEngine(data.bin_edges, max_rows=64, slo_s=10.0)
+    eng.add_version("old", half, weight=0.5, model_step=N_TREES // 2)
+    eng.add_version("new", state.forest, weight=0.5, model_step=N_TREES)
+    reqs = [PredictRequest(uid=i, x=x[4 * i : 4 * i + 4]) for i in range(50)]
+    routed = {r.uid: eng.submit(r) for r in reqs}
+    outs = eng.run()
+    assert len(outs) == 50
+    by_version = {"old": 0, "new": 0}
+    pred = {
+        "old": np.asarray(forest_predict(half, data.bins)),
+        "new": np.asarray(forest_predict(state.forest, data.bins)),
+    }
+    want_step = {"old": N_TREES // 2, "new": N_TREES}
+    for r in outs:
+        assert r.version == routed[r.uid]
+        assert r.model_step == want_step[r.version]
+        np.testing.assert_allclose(
+            r.scores, pred[r.version][4 * r.uid : 4 * r.uid + 4],
+            rtol=1e-6, atol=1e-6,
+        )
+        by_version[r.version] += 1
+    assert by_version["old"] > 5 and by_version["new"] > 5  # both sides used
+    # routing is uid-deterministic: resubmitting lands identically
+    assert {r.uid: eng.submit(r) for r in reqs} == routed
+    eng.flush()
+    # weight 0 drains a version out of the split
+    eng.set_weight("old", 0.0)
+    assert all(
+        eng.submit(PredictRequest(uid=u, x=x[:2])) == "new" for u in range(20)
+    )
+    eng.flush()
+
+
+def test_engine_shadow_traffic(forest_engine_setup):
+    """Shadow versions see a copy of every routed request but answer none
+    of it; explicit version= pins route directly (even to a shadow)."""
+    x, data, state, half, ForestEngine = forest_engine_setup
+    eng = ForestEngine(data.bin_edges, max_rows=64, slo_s=10.0)
+    eng.add_version("live", state.forest, model_step=N_TREES)
+    eng.add_version("cand", half, shadow=True, model_step=N_TREES // 2)
+    for i in range(10):
+        assert eng.submit(PredictRequest(uid=i, x=x[2 * i : 2 * i + 2])) == "live"
+    outs = eng.run()
+    assert len(outs) == 10 and all(r.version == "live" for r in outs)
+    shadow = eng.shadow_results
+    assert sorted(r.uid for r in shadow) == list(range(10))
+    pred_half = np.asarray(forest_predict(half, data.bins))
+    for r in shadow:
+        assert r.version == "cand" and r.model_step == N_TREES // 2
+        np.testing.assert_allclose(
+            r.scores, pred_half[2 * r.uid : 2 * r.uid + 2], rtol=1e-6, atol=1e-6
+        )
+    # pinning to the shadow serves it directly — still into the shadow bucket
+    assert eng.submit(PredictRequest(uid=77, x=x[:3], version="cand")) == "cand"
+    assert eng.run() == []
+    assert any(r.uid == 77 for r in eng.shadow_results)
+    with pytest.raises(KeyError, match="unknown"):
+        eng.submit(PredictRequest(uid=0, x=x[:2], version="nope"))
+
+
+def test_engine_slo_cutting(forest_engine_setup):
+    """Continuous batching: a lone small request is NOT served while its
+    deadline budget remains, and IS served once the budget is spent; a
+    full wave cuts immediately regardless of deadline."""
+    import time
+
+    x, data, state, half, ForestEngine = forest_engine_setup
+    eng = ForestEngine(data.bin_edges, max_rows=32, slo_s=0.5)
+    eng.add_version("v", state.forest, model_step=N_TREES)
+    eng.run([PredictRequest(uid=0, x=x[:4])])  # warm the jit cache
+    eng.submit(PredictRequest(uid=1, x=x[:4]))
+    assert eng.step() == []  # budget not spent: keep packing
+    time.sleep(0.6)
+    out = eng.step()
+    assert [r.uid for r in out] == [1]
+    assert out[0].queue_s >= 0.5  # it genuinely waited for the cut
+    # fill cut: max_rows queued serves with no deadline wait
+    eng.submit(PredictRequest(uid=2, x=x[:32]))
+    out = eng.step()
+    assert [r.uid for r in out] == [2]
+    assert out[0].queue_s < 0.5
+
+
+def test_engine_background_loop_meets_slo(forest_engine_setup):
+    """The started engine serves a trickle of mixed-size requests without
+    caller involvement, and (warm) end-to-end latency honors the SLO."""
+    import time
+
+    x, data, state, half, ForestEngine = forest_engine_setup
+    from repro.serving import percentile_latencies
+
+    eng = ForestEngine(data.bin_edges, max_rows=64, slo_s=0.5)
+    eng.add_version("v", state.forest)
+    eng.run([PredictRequest(uid=0, x=x[:64])])  # warm the jit cache
+    eng.start(interval_s=0.002)
+    try:
+        rng = np.random.default_rng(0)
+        for uid in range(1, 21):
+            n = int(rng.integers(1, 20))
+            eng.submit(PredictRequest(uid=uid, x=x[:n]))
+            time.sleep(0.003)
+        deadline = time.perf_counter() + 10.0
+        got = []
+        while len(got) < 20 and time.perf_counter() < deadline:
+            got.extend(eng.poll())
+            time.sleep(0.01)
+    finally:
+        eng.stop()
+    got.extend(eng.poll())
+    assert sorted(r.uid for r in got) == list(range(1, 21))
+    stats = percentile_latencies(got)
+    assert set(stats) == {
+        "queue_p50_ms", "queue_p99_ms", "compute_p50_ms",
+        "compute_p99_ms", "latency_p50_ms", "latency_p99_ms",
+    }
+    # generous 2x slack: CI boxes jitter, but a broken cut policy (e.g.
+    # waves only cut on fill) would blow far past the 500ms SLO
+    assert stats["latency_p99_ms"] <= 2 * 0.5 * 1e3
+
+
+def test_engine_quantized_version_parity(forest_engine_setup):
+    """A quantized version serves within the documented tolerance of its
+    f32 twin on identical pinned traffic."""
+    from repro.trees import quantization_atol
+
+    x, data, state, half, ForestEngine = forest_engine_setup
+    eng = ForestEngine(data.bin_edges, max_rows=64, slo_s=10.0)
+    eng.add_version("f32", state.forest)
+    eng.add_version("q8", state.forest, quantize="int8", weight=0.0)
+    atol = quantization_atol(state.forest, state.forest.quantize("int8"))
+    eng.submit(PredictRequest(uid=0, x=x[:50], version="f32"))
+    eng.submit(PredictRequest(uid=1, x=x[:50], version="q8"))
+    outs = eng.run()
+    assert [r.version for r in outs] == ["f32", "q8"]
+    np.testing.assert_allclose(
+        outs[1].scores, outs[0].scores, atol=atol + 1e-6
+    )
